@@ -1,0 +1,97 @@
+"""§Perf hillclimbing driver: run tagged dry-run variants for the three
+chosen cells and print the before/after roofline terms per iteration.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate [--cell N]
+
+Each variant is one hypothesis from the iteration log in EXPERIMENTS.md
+§Perf; artifacts land in experiments/dryrun/ with __<tag> suffixes so
+the baselines stay untouched.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# (arch, shape, tag, preset, overrides)
+CELLS = {
+    # most collective-bound + worst dense roofline fraction
+    "phi3mini": [
+        ("phi3-mini-3.8b", "train_4k", "__p1_fsdp", "fsdp", {}),
+        ("phi3-mini-3.8b", "train_4k", "__p2_fsdp_mb1", "fsdp",
+         {"microbatches": 1}),
+        ("phi3-mini-3.8b", "train_4k", "__p3_tpsp", "tp-sp", {}),
+        ("phi3-mini-3.8b", "train_4k", "__p4_fsdp_mb2", "fsdp",
+         {"microbatches": 2}),
+        # p5: + grad reduce-scatter (now default) + bf16 weight gathers
+        ("phi3-mini-3.8b", "train_4k", "__p5_fsdp_mb1_bf16w", "fsdp",
+         {"microbatches": 1, "weight_cast_bf16": True}),
+        # p6: grad-RS only (isolates the two effects)
+        ("phi3-mini-3.8b", "train_4k", "__p6_fsdp_mb1_rs", "fsdp",
+         {"microbatches": 1}),
+    ],
+    # the paper's own regime: FP8 MoE GEMMs + MLA; most collective-heavy
+    "deepseek": [
+        ("deepseek-v2-lite-16b", "train_4k", "__p1_fsdp", "fsdp", {}),
+        ("deepseek-v2-lite-16b", "train_4k", "__p2_fsdp_mb4", "fsdp",
+         {"microbatches": 4}),
+        ("deepseek-v2-lite-16b", "train_4k", "__p3_fsdp_cap10", "fsdp",
+         {"microbatches": 4, "capacity_factor": 1.0}),
+        # p4: mb8 (fits HBM) + grad-RS + bf16 weight gathers
+        ("deepseek-v2-lite-16b", "train_4k", "__p4_fsdp_bf16w", "fsdp",
+         {"microbatches": 8, "weight_cast_bf16": True}),
+    ],
+    # memory-bound serving representative
+    "stablelm_decode": [
+        ("stablelm-12b", "decode_32k", "__p1_kvfp8", "2d",
+         {"kv_cache_dtype": "fp8"}),
+        ("stablelm-12b", "decode_32k", "__p2_kvfp8_bf16w", "2d",
+         {"kv_cache_dtype": "fp8", "serve_params_dtype": "bf16"}),
+        ("stablelm-12b", "decode_32k", "__p3_bf16w", "2d",
+         {"serve_params_dtype": "bf16"}),
+    ],
+}
+
+
+def summarize(path):
+    from benchmarks.roofline import analyze
+
+    rec = json.load(open(path))
+    if rec["status"] != "ok":
+        return f"{rec['status']}: {rec.get('error','')[:120]}"
+    a = analyze(rec)
+    return (f"comp {a['compute_s']:.3f}s mem {a['memory_s']:.3f}s "
+            f"coll {a['collective_s']:.3f}s dom={a['dominant']} "
+            f"roofline={a['roofline_fraction']:.4f} "
+            f"hbm={rec['memory']['total_per_device']/2**30:.1f}GiB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell
+
+    todo = ([args.cell] if args.cell else list(CELLS))
+    for name in todo:
+        variants = CELLS[name]
+        arch, shape = variants[0][0], variants[0][1]
+        base = f"experiments/dryrun/{arch}__{shape}__pod16x16.json"
+        if os.path.exists(base):
+            print(f"[{name}] baseline   : {summarize(base)}", flush=True)
+        for arch, shape, tag, preset, ov in variants:
+            rec = run_cell(arch, shape, multi_pod=False,
+                           out_dir="experiments/dryrun", preset=preset,
+                           overrides=dict(ov), tag=tag)
+            path = (f"experiments/dryrun/{arch}__{shape}__pod16x16"
+                    f"{tag}.json")
+            print(f"[{name}] {tag[2:]:11s}: {summarize(path)}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Inject the §Dry-run and §Roofline tables into EXPERIMENTS.md from the
+recorded artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import analyze, bottleneck_hint  # noqa: E402
+
+
+def load_records(pattern="experiments/dryrun/*.json",
+                 baseline_only=True):
+    recs = []
+    for path in sorted(glob.glob(pattern)):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if baseline_only and len(parts) > 3:     # tagged §Perf artifacts
+            continue
+        recs.append(json.load(open(path)))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | status | FLOPs/dev | HLO bytes/dev "
+             "| coll wire B/dev | mem/dev GiB | compile s |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        if r["status"] == "ok":
+            wire = r["collectives"].get("wire_bytes_per_device", 0)
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r.get('flops_adjusted', r['flops']):.3e} | "
+                f"{r.get('bytes_adjusted', r['bytes_accessed']):.3e} | "
+                f"{wire:.3e} | "
+                f"{r['memory']['total_per_device']/2**30:.2f} | "
+                f"{r.get('compile_s', 0)} |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skip | — | — | — | — | — |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | {r.get('error','')[:60]} | | | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO flops | roofline frac | "
+             "what moves the dominant term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != "pod16x16":
+            continue   # roofline table is single-pod per the spec
+        a = analyze(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {a['compute_s']:.4f} | "
+            f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+            f"{a['dominant']} | {a['useful_ratio']:.3f} | "
+            f"{a['roofline_fraction']:.4f} | {bottleneck_hint(a, r)} |")
+    return "\n".join(lines)
+
+
+def inject(md_path: str, marker: str, table: str):
+    text = open(md_path).read()
+    pat = re.compile(f"<!-- {marker} -->.*?(?=\n## |\\Z)", re.S)
+    repl = f"<!-- {marker} -->\n\n{table}\n"
+    if pat.search(text):
+        text = pat.sub(repl, text)
+    open(md_path, "w").write(text)
+
+
+def main():
+    recs = load_records()
+    inject("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table(recs))
+    inject("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table(recs))
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skipped")
+    err = sum(1 for r in recs if r["status"] not in ("ok", "skipped"))
+    print(f"injected: {ok} ok, {skip} skipped, {err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Per (arch × shape × mesh) cell, from experiments/dryrun/*.json:
+  compute term    = HLO_FLOPs_per_device            / PEAK_FLOPS
+  memory term     = HLO_bytes_per_device            / HBM_BW
+  collective term = collective_wire_bytes_per_device / LINK_BW
+
+HLO_FLOPs/bytes are the while-trip-adjusted per-device numbers from the
+dry-run (cost_analysis on an SPMD module is per device; scan bodies are
+re-multiplied via the per-segment probes — see launch/dryrun.py).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens per step;
+serve steps use 2·N(+attention) per token forward-only accounting.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s/link (ICI)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def param_count(cfg) -> dict:
+    """Analytic parameter counts (total and activated-per-token)."""
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.kv_lora:   # MLA
+            dq = cfg.q_nope + cfg.q_rope
+            return (d * cfg.n_heads * dq + d * cfg.kv_lora + d * cfg.q_rope
+                    + cfg.kv_lora * cfg.n_heads * (cfg.q_nope + cfg.v_head)
+                    + cfg.n_heads * cfg.v_head * d)
+        dh = cfg.head_dim
+        return d * dh * (cfg.n_heads * 2 + cfg.n_kv * 2)
+
+    def ffn_params(width):
+        gated = cfg.act in ("swiglu", "geglu")
+        return d * width * (3 if gated else 2)
+
+    if cfg.family == "ssm":
+        per_layer = 5 * d * d + 2 * d * cfg.d_ff + d * d \
+            + d * (5 * cfg.ddlerp_rank) + cfg.decay_rank * 2 * d
+        total = embed + L * per_layer
+        return {"total": total, "active": total}
+    if cfg.family == "hybrid":
+        lru = cfg.lru_width
+        rec = 2 * d * lru + lru * d + 2 * lru * lru + ffn_params(f)
+        att = attn_params() + ffn_params(f)
+        n_att = L // 3
+        total = embed + (L - n_att) * rec + n_att * att
+        return {"total": total, "active": total}
+    per_layer_dense = attn_params() + ffn_params(cfg.dense_ff or f)
+    if cfg.n_experts:
+        expert = ffn_params(f)
+        moe_layers = L - cfg.first_dense
+        total = embed + cfg.first_dense * per_layer_dense + moe_layers * (
+            attn_params() + cfg.n_experts * expert
+            + cfg.n_shared * expert + d * cfg.n_experts)
+        active = embed + cfg.first_dense * per_layer_dense + moe_layers * (
+            attn_params() + (cfg.top_k + cfg.n_shared) * expert)
+        return {"total": total, "active": active}
+    total = embed + L * per_layer_dense
+    return {"total": total, "active": total}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for training; 2·N_active·tokens for serving steps."""
+    pc = param_count(cfg)
+    n = pc["active"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: 1 new token
+
+
+def analyze(record: dict) -> dict:
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+
+    cfg = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    chips = record["n_devices"]
+
+    flops_dev = record.get("flops_adjusted", record["flops"])
+    bytes_dev = record.get("bytes_adjusted", record["bytes_accessed"])
+    wire_dev = record["collectives"].get(
+        "wire_bytes_per_device", record["collectives"]["total_bytes"])
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = wire_dev / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mflops = model_flops(cfg, shape)
+    hlo_total = flops_dev * chips
+    useful = mflops / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful model flops per second at the bound set
+    # by the dominant term, relative to the chips' peak
+    step_time = max(terms.values())
+    achieved = mflops / step_time / chips if step_time else 0.0
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mflops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": round(useful, 4),
+        "roofline_fraction": round(achieved / PEAK_FLOPS, 4),
+        "step_time_s": round(step_time, 6),
+    }
+
+
+def bottleneck_hint(analysis: dict, record: dict) -> str:
+    d = analysis["dominant"]
+    if d == "collective":
+        return ("shrink TP traffic: move activation sharding off the "
+                "model axis (FSDP-dominant layout) or overlap the "
+                "per-layer all-reduces with the next GEMM")
+    if d == "memory":
+        return ("cut HBM bytes: fp8 weight/KV-cache storage and larger "
+                "fused blocks (fewer accumulator spills)")
+    return ("raise MXU utilization: bigger per-chip GEMM tiles "
+            "(less padding), or drop remat recompute on the cheap ops")
+
+
+def main(out_path: str | None = None):
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"],
+                         "status": rec.get("status"),
+                         "reason": rec.get("reason",
+                                           rec.get("error", ""))[:90]})
+            continue
+        a = analyze(rec)
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "mesh": rec["mesh"], "status": "ok", **a,
+                     "hint": bottleneck_hint(a, rec)})
+
+    hdr = (f"{'arch':25s} {'shape':12s} {'mesh':11s} {'comp(s)':>9s} "
+           f"{'mem(s)':>9s} {'coll(s)':>9s} {'dom':>6s} {'useful':>7s} "
+           f"{'roofline':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:25s} {r['shape']:12s} "
+                         f"{r['mesh']:11s} {r['status']}: "
+                         f"{r.get('reason','')}")
+            continue
+        lines.append(
+            f"{r['arch']:25s} {r['shape']:12s} {r['mesh']:11s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+            f"{r['collective_s']:9.4f} {r['dominant']:>6s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.4f}")
+    table = "\n".join(lines)
+    print(table)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main(out_path="experiments/roofline.json")

@@ -1,0 +1,261 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  CPU-runtime caveat
+(EXPERIMENTS.md): FP8 is emulated on this container, so wall-clock rows
+measure the *emulation*; the paper's speedup evidence is carried by the
+structural rows (bytes, scaling-op counts, SNR, roofline terms), which
+are runtime-independent.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 1: time to produce per-tensor weight scales —
+# just-in-time (max-reduction over the tensor) vs automatic (Eq. 10).
+# ---------------------------------------------------------------------------
+
+
+def bench_table1_autoscale():
+    from repro.core.autoscale import ScaleState, predicted_scale
+    from repro.core.formats import MOSS_CONFIG
+
+    sizes = [(11008, 16384), (11008, 8192), (4096, 12288), (4096, 4096)]
+    for shape in sizes:
+        w = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+
+        jit_scale = jax.jit(lambda w: jnp.max(jnp.abs(w)) / 448.0)
+        us_jit = _timeit(jit_scale, w)
+
+        st = ScaleState(s0=jnp.float32(0.01),
+                        steps_since=jnp.asarray(17, jnp.int32))
+        auto = jax.jit(lambda st, lr: predicted_scale(st, lr,
+                                                      MOSS_CONFIG))
+        us_auto = _timeit(auto, st, jnp.float32(3e-4))
+        # derived: bytes the JIT path must read from HBM that the
+        # automatic path does not (the paper's Table 1 mechanism)
+        saved = int(np.prod(shape)) * 4
+        row(f"table1_jit_scaling_{shape[0]}x{shape[1]}", us_jit,
+            f"reads_{saved}B")
+        row(f"table1_auto_scaling_{shape[0]}x{shape[1]}", us_auto,
+            "reads_0B_constant_time")
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 2/3: training throughput, MOSS vs BF16 vs COAT-style —
+# smoke-scale wall clock + structural accounting.
+# ---------------------------------------------------------------------------
+
+
+def bench_table2_throughput():
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.train import quant_from_name
+    from repro.train.steps import (TrainHParams, init_train_state,
+                                   make_train_step)
+
+    B, S = 8, 128
+    for quant in ["bf16", "per_group", "moss"]:
+        cfg = get_config("olmo-7b", smoke=True).replace(
+            quant=quant_from_name(quant))
+        hp = TrainHParams(peak_lr=1e-3, warmup_steps=5, total_steps=100)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=S,
+                                      global_batch=B))
+        state = init_train_state(cfg, hp, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, hp), donate_argnums=(0,))
+        state, _ = step(state, data.batch_for_step(0))   # compile
+        t0 = time.perf_counter()
+        iters = 5
+        for i in range(iters):
+            state, m = step(state, data.batch_for_step(i + 1))
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        row(f"table2_train_step_{quant}", dt * 1e6,
+            f"tokens_per_s_{B*S/dt:.0f}_cpu_emulation")
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 5: activation-memory accounting — bytes saved for the
+# backward pass under bf16 vs MOSS fp8 residuals.
+# ---------------------------------------------------------------------------
+
+
+def bench_table5_memory_comm():
+    from repro.configs.registry import get_config
+    from repro.launch.train import quant_from_name
+    from repro.models.layers import (abstract_tree, quant_mask_tree,
+                                     wrap_qt_nojit)
+    from repro.models.transformer import ce_loss, forward, model_defs
+
+    cfg0 = get_config("llama2-7b", smoke=True)
+    B, S = 4, 256
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+
+    results = {}
+    for quant in ["bf16", "moss"]:
+        cfg = cfg0.replace(quant=quant_from_name(quant), remat=False)
+        defs = model_defs(cfg)
+        params = abstract_tree(defs)
+
+        def loss_fn(params, cfg=cfg, defs=defs):
+            qp = wrap_qt_nojit(params, quant_mask_tree(defs))
+            logits, _, _ = forward(cfg, cfg.quant, qp, batch,
+                                   mode="train")
+            return ce_loss(cfg, logits, batch["labels"])
+
+        res_shapes = jax.eval_shape(
+            lambda p: jax.vjp(loss_fn, p)[1], params)
+        leaves = [l for l in jax.tree.leaves(res_shapes)
+                  if hasattr(l, "shape")]
+        total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in leaves)
+        results[quant] = total
+        row(f"table5_residual_bytes_{quant}", 0.0, f"{total}B")
+    ratio = results["bf16"] / max(results["moss"], 1)
+    row("table5_residual_saving", 0.0, f"{ratio:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 6: quantized GEMM comparison at the paper's shapes.
+# ---------------------------------------------------------------------------
+
+
+def bench_table6_gemm():
+    from repro.core.quant import (MxQ, PerGroupQ, PerTensorQ, group_gemm,
+                                  mx_gemm, pt_gemm, quant_mx,
+                                  quant_per_group, quant_per_tensor)
+
+    shapes = [(2048, 7168, 4096), (4096, 2048, 7168), (4096, 4096, 8192)]
+    for m, n, k in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n),
+                              jnp.float32) * 0.02
+        xq_mx = quant_mx(x)
+        xq_pg = quant_per_group(x, 128)
+        xq_pt = quant_per_tensor(x)
+        wq = quant_per_tensor(w)
+
+        f_mx = jax.jit(lambda q, e, s: mx_gemm(MxQ(q, e, s), wq,
+                                               jnp.bfloat16))
+        us_mx = _timeit(f_mx, xq_mx.q, xq_mx.sexp, xq_mx.s, iters=3,
+                        warmup=1)
+        f_pg = jax.jit(lambda q, s: group_gemm(PerGroupQ(q, s), wq,
+                                               jnp.bfloat16))
+        us_pg = _timeit(f_pg, xq_pg.q, xq_pg.s, iters=3, warmup=1)
+        f_pt = jax.jit(lambda q, s: pt_gemm(PerTensorQ(q, s), wq,
+                                            jnp.bfloat16))
+        us_pt = _timeit(f_pt, xq_pt.q, xq_pt.s, iters=3, warmup=1)
+
+        # structural: in-loop VPU dequant multiplies of the (bm,bn)
+        # accumulator per output element (the cost MOSS removes)
+        row(f"table6_gemm_moss_{m}x{n}x{k}", us_mx,
+            "acc_rescales_per_output_1(epilogue)")
+        row(f"table6_gemm_coat_{m}x{n}x{k}", us_pg,
+            f"acc_rescales_per_output_{k//128}(inloop)")
+        row(f"table6_gemm_te_{m}x{n}x{k}", us_pt,
+            "acc_rescales_per_output_1(epilogue)")
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 7: SNR of quantization schemes on LLM-like activations.
+# ---------------------------------------------------------------------------
+
+
+def bench_table7_snr():
+    from repro.core.formats import (MOSS_CONFIG, PER_GROUP_CONFIG,
+                                    PER_TENSOR_CONFIG)
+    from repro.core.quant import (model_snr_moss, model_snr_per_group,
+                                  model_snr_per_tensor, scheme_snr)
+
+    layers = {
+        "attention_output": (300.0, 0.002),
+        "ffn_intermediate": (800.0, 0.001),
+        "layernorm_input": (100.0, 0.005),
+    }
+    for name, (scale, dens) in layers.items():
+        k1, k2 = jax.random.split(jax.random.PRNGKey(hash(name) % 2**31))
+        x = jax.random.normal(k1, (256, 2048), jnp.float32) \
+            * (1 + scale * jax.random.bernoulli(k2, dens, (256, 2048)))
+        t = float(model_snr_per_tensor(x))
+        g = float(model_snr_per_group(x))
+        mm_ = float(model_snr_moss(x))
+        row(f"table7_modelSNR_{name}", 0.0,
+            f"pt_{t:.1f}dB_pg_{g:.1f}dB_moss_{mm_:.1f}dB")
+        tm = float(scheme_snr(x, PER_TENSOR_CONFIG))
+        gm = float(scheme_snr(x, PER_GROUP_CONFIG))
+        mq = float(scheme_snr(x, MOSS_CONFIG))
+        row(f"table7_measuredSNR_{name}", 0.0,
+            f"pt_{tm:.1f}dB_pg_{gm:.1f}dB_moss_{mq:.1f}dB")
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 9/10: rescale-interval ablation + scaling strategies.
+# ---------------------------------------------------------------------------
+
+
+def bench_table9_interval():
+    from repro.configs.registry import get_config
+    from repro.core.formats import QuantConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.train.steps import (TrainHParams, init_train_state,
+                                   make_train_step)
+
+    for name, scaling, interval in [("jit", "jit", 1),
+                                    ("auto100", "auto", 100),
+                                    ("auto500", "auto", 500),
+                                    ("delayed", "delayed", 1)]:
+        cfg = get_config("llama2-7b", smoke=True).replace(
+            quant=QuantConfig(mode="moss", weight_scaling=scaling,
+                              rescale_interval=interval))
+        hp = TrainHParams(peak_lr=1e-3, warmup_steps=5, total_steps=60)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                      global_batch=8))
+        state = init_train_state(cfg, hp, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, hp), donate_argnums=(0,))
+        losses = []
+        t0 = time.perf_counter()
+        for t in range(30):
+            state, m = step(state, data.batch_for_step(t))
+            losses.append(float(m["loss"]))
+        dt = (time.perf_counter() - t0) / 30
+        row(f"table9_interval_{name}", dt * 1e6,
+            f"final_loss_{np.mean(losses[-5:]):.4f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table1_autoscale()
+    bench_table7_snr()
+    bench_table6_gemm()
+    bench_table5_memory_comm()
+    bench_table2_throughput()
+    bench_table9_interval()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Run one MOSS FP8 train step on every assigned architecture
+(--arch <id> selects one; default sweeps all ten).
+
+  PYTHONPATH=src python examples/multiarch_smoke.py [--arch rwkv6-3b]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.registry import ASSIGNED, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train.steps import TrainHParams, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    choices=ASSIGNED + [None], nargs="?")
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ASSIGNED
+
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        hp = TrainHParams(peak_lr=1e-3, warmup_steps=2, total_steps=10)
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                      global_batch=4))
+        state = init_train_state(cfg, hp, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, hp), donate_argnums=(0,))
+        t0 = time.time()
+        losses = []
+        for t in range(args.steps):
+            batch = data.batch_for_step(t)
+            if cfg.input_mode == "embeddings":
+                from repro.launch.train import _stub_embeds
+                batch["embeds"] = _stub_embeds(cfg, batch["tokens"])
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        print(f"{arch:26s} [{cfg.family:7s}] losses="
+              f"{['%.3f' % l for l in losses]}  ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

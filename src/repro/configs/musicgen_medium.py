@@ -1,0 +1,33 @@
+"""musicgen-medium [audio]: 48L d=1536 24H (MHA) d_ff=6144, vocab 2048 —
+decoder-only over EnCodec tokens.  [arXiv:2306.05284; hf]
+
+Backbone only (harness note): the EnCodec frontend + 4-codebook delay
+pattern are STUBBED — ``input_specs()`` provides precomputed frame
+embeddings (B, S, d) and single-stream labels over the 2048-entry
+codebook.  Sinusoidal positions, LayerNorm, GELU MLP.
+24 heads do not divide the 16-way model axis: attention activations run
+data-parallel (heads replicated); FFN/projection matmuls still
+tensor-shard on d_ff/d_model (DESIGN.md §6).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv=24,
+    d_ff=6144,
+    vocab=2048,
+    d_head=64,
+    act="gelu_mlp",
+    norm="layernorm",
+    input_mode="embeddings",
+    pos_embedding="sinusoidal",
+)
+
+SMOKE_CONFIG = CONFIG.replace(
+    n_layers=2, d_model=96, n_heads=3, n_kv=3, d_ff=192, vocab=128,
+    d_head=32, attn_chunk=64, remat=False)

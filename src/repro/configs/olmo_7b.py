@@ -1,0 +1,25 @@
+"""OLMo-7B — the paper's own pretraining architecture (paper Table 8:
+32L d=4096 32H, seq 2048).  Used by the MOSS-vs-BF16 reproduction
+benchmarks.  [arXiv:2402.00838]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=32,
+    d_ff=11_008,
+    vocab=50_304,
+    d_head=128,
+    act="swiglu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+)
+
+SMOKE_CONFIG = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv=4, d_ff=256, vocab=512,
+    d_head=32, attn_chunk=64, remat=False)

@@ -1,0 +1,88 @@
+"""MOSS automatic scaling for weight tensors (paper §3.2).
+
+AdamW updates are bounded by the step size:  |ΔW_t| ≤ η  (paper Thm 2),
+hence  max|W_t| ≤ max|W_0| + η·t  and the per-tensor weight scale can be
+*predicted* instead of measured:
+
+    s_t = s_0 + η · (t - t_refresh) / FP8_MAX            (paper Eq. 10)
+
+A real max-reduction runs only every ``rescale_interval`` steps.  Between
+refreshes the predicted scale strictly upper-bounds the just-in-time
+scale, so the quantized weights can never overflow (paper Fig 4).
+
+State is a pytree threaded through the jitted train step; the refresh is
+a ``lax.cond`` so the max-reduction bytes appear in the HLO only on the
+refresh branch (and the roofline's memory term drops accordingly).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import TINY, QuantConfig, fp8_max
+
+
+class ScaleState(NamedTuple):
+    """Automatic-scaling state for ONE weight tensor."""
+
+    s0: jax.Array            # f32 scale measured at the last refresh
+    steps_since: jax.Array   # i32 steps since last refresh
+
+
+def init_scale_state(w: jax.Array, cfg: QuantConfig) -> ScaleState:
+    """s_0 from a real max-reduction at initialization (paper: 'determined
+    via a max-reduction operation at initialization')."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    s0 = jnp.maximum(amax, TINY) / fp8_max(cfg.fwd_format)
+    return ScaleState(s0=s0, steps_since=jnp.zeros((), jnp.int32))
+
+
+def predicted_scale(state: ScaleState, lr: jax.Array,
+                    cfg: QuantConfig) -> jax.Array:
+    """Paper Eq. (10): s_t = s_0 + η·t / FP8_MAX (t counted since refresh)."""
+    t = state.steps_since.astype(jnp.float32)
+    return state.s0 + lr.astype(jnp.float32) * t / fp8_max(cfg.fwd_format)
+
+
+def update_scale_state(state: ScaleState, w: jax.Array,
+                       cfg: QuantConfig) -> ScaleState:
+    """Advance one step; every ``rescale_interval`` steps run the real
+    max-reduction (lax.cond → untaken branch reads no weight bytes)."""
+    t_next = state.steps_since + 1
+
+    def refresh(_):
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+        s0 = jnp.maximum(amax, TINY) / fp8_max(cfg.fwd_format)
+        return ScaleState(s0=s0, steps_since=jnp.zeros((), jnp.int32))
+
+    def predict(_):
+        return ScaleState(s0=state.s0, steps_since=t_next)
+
+    if cfg.weight_scaling == "jit":
+        return refresh(None)        # max-reduce every step
+    if cfg.weight_scaling == "delayed":
+        # delayed scaling: refresh every step but the scale *used* this
+        # step was last step's (callers read the scale before update).
+        return refresh(None)
+    return jax.lax.cond(t_next >= cfg.rescale_interval, refresh, predict,
+                        operand=None)
+
+
+def tree_init_scale_states(params, cfg: QuantConfig):
+    """ScaleState for every weight tensor in a param pytree."""
+    return jax.tree.map(lambda w: init_scale_state(w, cfg), params)
+
+
+def tree_update_scale_states(states, params, cfg: QuantConfig):
+    return jax.tree.map(
+        lambda st, w: update_scale_state(st, w, cfg), states, params,
+        is_leaf=lambda x: isinstance(x, ScaleState))
+
+
+def tree_predicted_scales(states, lr, cfg: QuantConfig):
+    return jax.tree.map(
+        lambda st: predicted_scale(st, lr, cfg), states,
+        is_leaf=lambda x: isinstance(x, ScaleState))

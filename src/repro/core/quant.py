@@ -1,0 +1,263 @@
+"""Quantization schemes: per-tensor, per-group (COAT) and MOSS two-level
+microscaling — pure-jnp implementations.
+
+These are the *semantic* definitions.  ``repro.kernels`` holds the
+Pallas TPU kernels whose oracles are these functions; on CPU (this
+container) the linear layers run these directly and XLA fuses them.
+
+Conventions
+-----------
+Quantization for a GEMM ``y = x @ w`` groups along the **inner (K)
+dimension**, which is the *last* axis of ``x`` and the *first* of ``w``.
+All public quantizers here group along the last axis; callers transpose
+as needed.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import (
+    TINY,
+    FP8Format,
+    QuantConfig,
+    cast_fp8,
+    e8m0_decode,
+    e8m0_encode,
+    fp8_max,
+)
+
+
+class PerTensorQ(NamedTuple):
+    """TE-style per-tensor quantization: q ≈ x / s."""
+
+    q: jax.Array          # fp8
+    s: jax.Array          # f32 scalar
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        return self.q.astype(jnp.float32).astype(dtype) * self.s.astype(dtype)
+
+
+class PerGroupQ(NamedTuple):
+    """COAT-style per-group quantization along the last axis."""
+
+    q: jax.Array          # fp8, shape (..., K)
+    s: jax.Array          # f32, shape (..., K // group)
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        g = self.q.shape[-1] // self.s.shape[-1]
+        qf = self.q.astype(jnp.float32).reshape(*self.q.shape[:-1], -1, g)
+        x = qf * self.s[..., None]
+        return x.reshape(self.q.shape).astype(dtype)
+
+
+class MxQ(NamedTuple):
+    """MOSS two-level microscaled tensor.
+
+    q      fp8 values, shape (..., K)
+    sexp   int8 E8M0 exponents (level-2), shape (..., K // micro_group)
+    s      f32 global scale (level-1), scalar
+
+    Effective per-group scale is ``s * 2^sexp`` with ``2^sexp ∈ (0,1]``.
+    """
+
+    q: jax.Array
+    sexp: jax.Array
+    s: jax.Array
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        g = self.q.shape[-1] // self.sexp.shape[-1]
+        qf = self.q.astype(jnp.float32).reshape(*self.q.shape[:-1], -1, g)
+        ss = e8m0_decode(self.sexp)
+        x = qf * (ss * self.s)[..., None]
+        return x.reshape(self.q.shape).astype(dtype)
+
+    def storage_bits_per_value(self) -> float:
+        """fp8 payload + amortized E8M0 metadata (paper's storage claim)."""
+        g = self.q.shape[-1] // self.sexp.shape[-1]
+        return 8.0 + 8.0 / g
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+
+def quant_per_tensor(x: jax.Array, fmt: FP8Format = "e4m3",
+                     scale: jax.Array | None = None) -> PerTensorQ:
+    """One f32 scale for the whole tensor.  ``scale`` may be supplied
+    externally (e.g. by MOSS automatic scaling) to skip the max-reduction."""
+    if scale is None:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        scale = jnp.maximum(amax, TINY) / fp8_max(fmt)
+    scale = jnp.asarray(scale, jnp.float32)
+    q = cast_fp8(x.astype(jnp.float32) / scale, fmt)
+    return PerTensorQ(q=q, s=scale)
+
+
+def quant_per_group(x: jax.Array, group: int = 128,
+                    fmt: FP8Format = "e4m3") -> PerGroupQ:
+    """COAT-style per-group scales along the last axis."""
+    *lead, k = x.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    xg = x.astype(jnp.float32).reshape(*lead, k // group, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    s = jnp.maximum(amax, TINY) / fp8_max(fmt)
+    q = cast_fp8(xg / s[..., None], fmt).reshape(x.shape)
+    return PerGroupQ(q=q, s=s)
+
+
+def quant_mx(x: jax.Array, micro_group: int = 32, fmt: FP8Format = "e4m3",
+             global_scale: jax.Array | None = None) -> MxQ:
+    """MOSS two-level microscaling (paper Eqs. 2–3).
+
+    1. per-micro-group fine scale   s_g = amax_g / FP8_MAX
+    2. level-1 global scale         s   = max_g s_g   (or supplied)
+    3. level-2 E8M0 subscale        ss_g = 2^ceil(log2(s_g / s)) ∈ (0,1]
+    4. values                       q = cast_fp8(x / (s·ss_g))
+    """
+    *lead, k = x.shape
+    assert k % micro_group == 0, f"K={k} not divisible by {micro_group}"
+    xf = x.astype(jnp.float32)
+    xg = xf.reshape(*lead, k // micro_group, micro_group)
+    amax_g = jnp.max(jnp.abs(xg), axis=-1)
+    s_g = amax_g / fp8_max(fmt)
+    if global_scale is None:
+        s = jnp.maximum(jnp.max(s_g), TINY)
+    else:
+        s = jnp.maximum(jnp.asarray(global_scale, jnp.float32), TINY)
+    sexp = e8m0_encode(s_g / s)
+    ss = e8m0_decode(sexp)
+    # ss·s can underflow f32 to 0 for tiny-magnitude tensors (e.g. late
+    # gradients: s ~ 1e-20, ss = 2^-127).  A zero denominator means the
+    # group's values are below f32 resolution relative to the tensor —
+    # quantize them to 0 (dequant multiplies by the same 0: consistent).
+    denom = (ss * s)[..., None]
+    q = cast_fp8(jnp.where(denom > 0, xg / jnp.where(denom > 0, denom, 1.0),
+                           0.0), fmt).reshape(x.shape)
+    return MxQ(q=q, sexp=sexp, s=s)
+
+
+# ---------------------------------------------------------------------------
+# Quantized GEMM semantics (the reference used by the Pallas kernels and by
+# the CPU execution path).  preferred_element_type=f32 models the MXU's f32
+# accumulator.
+# ---------------------------------------------------------------------------
+
+
+def mx_gemm(xq: MxQ, wq: PerTensorQ, out_dtype=jnp.bfloat16) -> jax.Array:
+    """MOSS GEMM (paper Fig 3b):  y = (Qx · 2^sexp) @ Qw  ·  (s_x · s_w).
+
+    The level-2 exponent scaling rides with the operand (cheap); the single
+    f32 dequant `s_x·s_w` happens once in the epilogue.
+    """
+    from .runtime_flags import mm
+
+    *lead, k = xq.q.shape
+    g = k // xq.sexp.shape[-1]
+    ss = e8m0_decode(xq.sexp)                                  # (..., K/g)
+    xf = xq.q.astype(jnp.bfloat16).reshape(*lead, k // g, g)
+    # exponent-only rescale of the operand: exact in bf16 (po2)
+    xf = (xf * ss[..., None].astype(jnp.bfloat16)).reshape(*lead, k)
+    acc = mm(xf, wq.q, out_dtype=jnp.float32)
+    y = acc * (xq.s * wq.s)                                    # epilogue
+    return y.astype(out_dtype)
+
+
+def group_gemm(xq: PerGroupQ, wq: PerGroupQ | PerTensorQ,
+               out_dtype=jnp.bfloat16) -> jax.Array:
+    """COAT-style GEMM (paper Fig 3a): per-group f32 rescale of every
+    partial sum along K — the in-loop dequantization MOSS removes."""
+    from .runtime_flags import einsum
+
+    *lead, k = xq.q.shape
+    g = k // xq.s.shape[-1]
+    xf = xq.q.reshape(*lead, k // g, g)
+    if isinstance(wq, PerTensorQ):
+        w_s = jnp.broadcast_to(wq.s, (k // g, wq.q.shape[-1]))
+    else:
+        w_s = wq.s  # (K/g, N)
+    wf = wq.q.reshape(k // g, g, -1)
+    # partial sums per K-group, each rescaled in f32 then accumulated:
+    partial = einsum("...gk,gkn->...gn", xf, wf, out_dtype=jnp.float32)
+    scaled = partial * (xq.s[..., None] * w_s[(None,) * len(lead)])
+    y = jnp.sum(scaled, axis=-2)
+    return y.astype(out_dtype)
+
+
+def pt_gemm(xq: PerTensorQ, wq: PerTensorQ, out_dtype=jnp.bfloat16) -> jax.Array:
+    """TE-style per-tensor GEMM: epilogue-only dequant."""
+    from .runtime_flags import mm
+
+    acc = mm(xq.q, wq.q, out_dtype=jnp.float32)
+    return (acc * (xq.s * wq.s)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fidelity metric (paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def snr_db(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Quantization signal-to-noise ratio in dB."""
+    x = x.astype(jnp.float32)
+    noise = x_hat.astype(jnp.float32) - x
+    p_sig = jnp.mean(x * x)
+    p_noise = jnp.maximum(jnp.mean(noise * noise), TINY)
+    return 10.0 * jnp.log10(p_sig / p_noise)
+
+
+def scheme_snr(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """SNR of quantize→dequantize under the configured scheme."""
+    if cfg.mode == "per_tensor":
+        dq = quant_per_tensor(x, cfg.fwd_format).dequant()
+    elif cfg.mode == "per_group":
+        dq = quant_per_group(x, cfg.group_size, cfg.fwd_format).dequant()
+    elif cfg.mode == "moss":
+        dq = quant_mx(x, cfg.micro_group, cfg.fwd_format).dequant()
+    else:
+        dq = x.astype(jnp.bfloat16).astype(jnp.float32)
+    return snr_db(x, dq)
+
+
+# ---------------------------------------------------------------------------
+# Paper-model (Theorem 1) SNR: the paper analyzes quantization noise as
+# *uniform in [-s/2, s/2]* per group — an absolute-noise (fixed-point)
+# model, under which noise power is s²/12 regardless of the values.  True
+# float8 noise is relative for in-range values (power-of-two rescaling is
+# *exact*), so the measured-SNR ordering only separates in the
+# saturation/underflow regimes; the paper's Eq. (5)-(7) ordering, however,
+# holds for any tensor with within-group structure.  Both views are
+# implemented; EXPERIMENTS.md discusses the distinction.
+# ---------------------------------------------------------------------------
+
+
+def _uniform_model_snr(x: jax.Array, noise_power: jax.Array) -> jax.Array:
+    sigma2 = jnp.mean(jnp.square(x.astype(jnp.float32)))
+    return 10.0 * jnp.log10(sigma2 / jnp.maximum(noise_power, TINY))
+
+
+def model_snr_per_tensor(x: jax.Array, fmt: FP8Format = "e4m3") -> jax.Array:
+    """Paper Eq. (5): noise = s²/12 with s = max|X|/Δmax."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32))) / fp8_max(fmt)
+    return _uniform_model_snr(x, s * s / 12.0)
+
+
+def model_snr_per_group(x: jax.Array, group: int = 128,
+                        fmt: FP8Format = "e4m3") -> jax.Array:
+    """Paper Eq. (6): noise = mean_g s_g²/12."""
+    *lead, k = x.shape
+    xg = x.astype(jnp.float32).reshape(*lead, k // group, group)
+    s_g = jnp.max(jnp.abs(xg), axis=-1) / fp8_max(fmt)
+    return _uniform_model_snr(x, jnp.mean(s_g * s_g) / 12.0)
+
+
+def model_snr_moss(x: jax.Array, micro_group: int = 32,
+                   fmt: FP8Format = "e4m3") -> jax.Array:
+    """Paper Eq. (7): noise = mean_g (s·ss_g)²/12 with E8M0 ss_g."""
+    q = quant_mx(x, micro_group, fmt)
+    eff = q.s * e8m0_decode(q.sexp)
+    return _uniform_model_snr(x, jnp.mean(eff * eff) / 12.0)

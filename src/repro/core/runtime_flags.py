@@ -1,0 +1,49 @@
+"""Backend-dependent execution flags.
+
+The CPU backend *compiles* bf16 x bf16 -> f32 dots but cannot *execute*
+them (DotThunk limitation).  Because every operand we feed a GEMM is an
+exact bf16 value (fp8 casts and power-of-two subscales are exact in
+bf16), computing with f32 operands + f32 accumulation is bit-identical
+to bf16 operands + f32 accumulation.  So:
+
+  - TPU (and dry-run lowering, which never executes): bf16 operands —
+    the real MXU operand dtype, and the dtype whose bytes the roofline
+    memory term should count.
+  - CPU execution (tests/benchmarks): f32 operands.
+
+``force_bf16_operands()`` is flipped on by launch/dryrun.py before
+lowering so the compiled HLO reflects TPU operand widths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_FORCE_BF16 = False
+
+
+def force_bf16_operands(value: bool = True) -> None:
+    global _FORCE_BF16
+    _FORCE_BF16 = value
+
+
+def mm_operand_dtype():
+    if _FORCE_BF16 or jax.default_backend() == "tpu":
+        return jnp.bfloat16
+    return jnp.float32
+
+
+def mm(a, b, out_dtype=jnp.float32):
+    """Portable matmul with bf16-operand semantics, f32 accumulation."""
+    dt = mm_operand_dtype()
+    a = a.astype(jnp.bfloat16).astype(dt)
+    b = b.astype(jnp.bfloat16).astype(dt)
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def einsum(spec, *args, out_dtype=jnp.float32):
+    dt = mm_operand_dtype()
+    args = [a.astype(jnp.bfloat16).astype(dt) for a in args]
+    return jnp.einsum(spec, *args,
+                      preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,84 @@
+"""Deterministic synthetic token pipeline.
+
+Stateless by construction — ``batch_for_step(step)`` is a pure function
+of (seed, step), so a restart resumes the exact data order with no
+pipeline checkpointing (the fault-tolerance contract in DESIGN.md §4).
+Batches are produced already sharded across the mesh's batch axes via
+jax.make_array_from_callback, so no host gathers the global batch.
+
+The generator mimics LM token statistics (Zipfian unigrams with a
+Markov-ish repetition structure) so that tiny-model CE losses behave
+like real text rather than uniform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    repeat_p: float = 0.3     # probability of copying an earlier token
+
+
+def _zipf_logits(vocab: int, a: float) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    return np.log(p / p.sum())
+
+
+class SyntheticLM:
+    """step -> {"tokens", "labels"} with tokens[t+1] == labels[t]."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._logits = jnp.asarray(_zipf_logits(cfg.vocab, cfg.zipf_a),
+                                   jnp.float32)
+
+    def _sample(self, key, batch: int):
+        c = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        base = jax.random.categorical(
+            k1, jnp.broadcast_to(self._logits, (batch, c.seq_len + 1,
+                                                c.vocab)))
+        # repetition structure: with prob repeat_p copy the token 8 back
+        rep = jax.random.bernoulli(k2, c.repeat_p, (batch, c.seq_len + 1))
+        shifted = jnp.roll(base, 8, axis=1)
+        toks = jnp.where(rep, shifted, base)
+        return toks
+
+    def batch_for_step(self, step: int, mesh=None):
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        if mesh is None:
+            toks = self._sample(key, c.global_batch)
+            return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+        sharding = named_sharding(mesh, ("batch", None),
+                                  (c.global_batch, c.seq_len))
+
+        def make(index):
+            # per-shard deterministic generation: fold in the batch offset
+            start = index[0].start or 0
+            stop = index[0].stop or c.global_batch
+            sub = jax.random.fold_in(key, start)
+            toks = np.asarray(self._sample(sub, stop - start))
+            return toks
+
+        full = jax.make_array_from_callback(
+            (c.global_batch, c.seq_len + 1),
+            named_sharding(mesh, ("batch", None),
+                           (c.global_batch, c.seq_len + 1)),
+            make)
+        return {"tokens": full[:, :-1], "labels": full[:, 1:]}

@@ -1,0 +1,46 @@
+"""Named sharding presets — the §Perf hillclimbing knobs.
+
+A preset is a logical-rule override set applied via
+``sharding_rules(...)`` around lowering.  The same model definition
+recompiles under any preset; the dry-run records which one produced
+each artifact.
+
+  2d        (baseline) Megatron-style: batch on (pod,data), TP on model
+            (heads/mlp/vocab/experts), params FSDP on data x TP on model.
+  fsdp      ZeRO-3-dominant: batch over EVERY mesh axis (pure DP for the
+            compute), params fully sharded over (data, model); no
+            activation TP traffic — per-layer weight all-gathers instead.
+  tp-sp     2d + Megatron sequence parallelism: the residual stream is
+            sequence-sharded on the model axis between blocks, so norms/
+            elementwise run 1/16th and the per-layer activation carry
+            shrinks 16x; GSPMD turns the TP all-reduces into
+            all-gather + reduce-scatter pairs.
+"""
+
+from __future__ import annotations
+
+PRESETS: dict[str, dict[str, tuple[str, ...]]] = {
+    "2d": {},
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "heads": (),
+        "kv_heads": (),
+        "mlp": (),
+        "vocab": (),
+        "lru": (),
+        "fsdp": ("data", "model"),
+        # experts keep the model axis: the EP shard_map path addresses
+        # mesh axes directly and tokens are already split over all axes
+        "experts": ("model",),
+        "kv_seq": ("model",),
+    },
+    "tp-sp": {
+        "seq": ("model",),
+    },
+}
+
+
+def preset_rules(name: str) -> dict[str, tuple[str, ...]]:
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; known: {list(PRESETS)}")
+    return PRESETS[name]

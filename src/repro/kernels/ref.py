@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the semantic ground truth —
+``repro.core.quant`` is the single source of those semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import TINY, fp8_max
+from repro.core.quant import MxQ, PerTensorQ, PerGroupQ
+from repro.core import quant as Q
+
+
+def mx_gemm_ref(qx, sexp, qw) -> jax.Array:
+    """Unscaled MX GEMM accumulation: (Qx·2^sexp) @ Qw in f32."""
+    y = Q.mx_gemm(MxQ(q=qx, sexp=sexp, s=jnp.float32(1.0)),
+                  PerTensorQ(q=qw, s=jnp.float32(1.0)),
+                  out_dtype=jnp.float32)
+    return y
+
+
+def group_gemm_ref(qx, sx, qw) -> jax.Array:
+    """Per-group GEMM with activation group scales applied, weight scale
+    NOT applied (matches group_gemm_pallas)."""
+    return Q.group_gemm(PerGroupQ(q=qx, s=sx),
+                        PerTensorQ(q=qw, s=jnp.float32(1.0)),
+                        out_dtype=jnp.float32)
+
+
+def mx_quant_ref(x, s_global, fmt: str = "e4m3"):
+    """Two-level quantize given a precomputed global scale."""
+    q = Q.quant_mx(x, micro_group=32, fmt=fmt, global_scale=s_global)
+    return q.q, q.sexp
+
+
+def global_scale_ref(x, fmt: str = "e4m3", micro: int = 32):
+    """Level-1 scale: max over the per-group fine scales (== amax/MAX)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.maximum(amax, TINY) / fp8_max(fmt)

@@ -1,0 +1,139 @@
+"""Abstract inputs (ShapeDtypeStruct) + shardings for every
+(arch × shape × mesh) dry-run cell — the shannon/kernels pattern:
+weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import resolve_spec
+from repro.models.layers import abstract_tree, spec_tree
+from repro.models.transformer import (
+    cache_logical_tree,
+    init_caches,
+    model_defs,
+)
+from repro.optim.adamw import OptState
+from repro.train.steps import TrainState, _scale_dims
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(abstract batch, batch shardings) for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        s = 1
+    tree, logical = {}, {}
+    if cfg.input_mode == "embeddings":
+        tree["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        logical["embeds"] = ("batch", None, "embed")
+    else:
+        tree["tokens"] = _sds((b, s), jnp.int32)
+        logical["tokens"] = ("batch", None)
+    if shape.kind == "train":
+        tree["labels"] = _sds((b, s), jnp.int32)
+        logical["labels"] = ("batch", None)
+        if cfg.input_mode == "embeddings":
+            tree["tokens"] = _sds((b, s), jnp.int32)
+            logical["tokens"] = ("batch", None)
+    shardings = {
+        k: NamedSharding(mesh, resolve_spec(logical[k], mesh,
+                                            tree[k].shape))
+        for k in tree
+    }
+    return tree, shardings
+
+
+def params_abstract(cfg: ModelConfig, dtype=None):
+    tree = abstract_tree(model_defs(cfg))
+    if dtype is None:
+        return tree
+    # serving checkpoints store reduced-precision weights (e.g. bf16):
+    # halves the per-step parameter HBM read of decode
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if s.dtype == jnp.float32 else s.dtype), tree)
+
+
+def params_shardings(cfg: ModelConfig, mesh):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        spec_tree(model_defs(cfg), mesh))
+
+
+def state_abstract(cfg: ModelConfig, qcfg=None):
+    """Abstract TrainState (no allocation)."""
+    qcfg = qcfg or cfg.quant
+    defs = model_defs(cfg)
+    params = abstract_tree(defs)
+    opt = jax.tree.map(
+        lambda p: OptState(mu=_sds(p.shape, jnp.float32),
+                           nu=_sds(p.shape, jnp.float32)), params)
+    sdims = _scale_dims(defs)
+    s0 = jax.tree.map(lambda p, n: _sds(p.shape[:n], jnp.float32),
+                      params, sdims)
+    t = jax.tree.map(lambda p: _sds((), jnp.int32), params)
+    res = (jax.tree.map(lambda p: _sds(p.shape, jnp.float32), params)
+           if qcfg.grad_comm_fp8 else None)
+    return TrainState(params=params, opt=opt, scale_s0=s0, scale_t=t,
+                      comm_residual=res, step=_sds((), jnp.int32))
+
+
+def state_shardings(cfg: ModelConfig, mesh, qcfg=None):
+    qcfg = qcfg or cfg.quant
+    defs = model_defs(cfg)
+    specs = spec_tree(defs, mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree.map(ns, specs)
+    opt = jax.tree.map(lambda s: OptState(mu=s, nu=s), p_sh)
+    sdims = _scale_dims(defs)
+
+    def scale_sh(spec, n):
+        from jax.sharding import PartitionSpec as P
+        return ns(P(*spec[:n]))
+
+    s0 = jax.tree.map(scale_sh, specs, sdims)
+    rep = ns(resolve_spec((), mesh))
+    t = jax.tree.map(lambda _: rep, specs)
+    res = p_sh if qcfg.grad_comm_fp8 else None
+    return TrainState(params=p_sh, opt=opt, scale_s0=s0, scale_t=t,
+                      comm_residual=res, step=rep)
+
+
+def caches_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def caches_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    logical = cache_logical_tree(cfg)
+    abstract = caches_abstract(cfg, shape)
+
+    def to_sh(ax, leaf):
+        return NamedSharding(mesh, resolve_spec(tuple(ax), mesh,
+                                                leaf.shape))
+
+    return jax.tree.map(
+        to_sh, logical, abstract,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def decode_tokens_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    if cfg.input_mode == "embeddings":
+        return _sds((b, 1, cfg.d_model), jnp.bfloat16)
+    return _sds((b, 1), jnp.int32)
+
+
+def decode_tokens_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    ab = decode_tokens_abstract(cfg, shape)
+    logical = (("batch", None, "embed") if cfg.input_mode == "embeddings"
+               else ("batch", None))
+    return NamedSharding(mesh, resolve_spec(logical, mesh, ab.shape))

@@ -1,0 +1,225 @@
+"""Attention: GQA/MQA/MHA with RoPE, full/sliding-window/local variants,
+flash-style chunked softmax (never materializes S×S), and a KV cache
+with ring-buffer semantics for window attention.
+
+All projections are MOSS-quantized linears.  Scores/softmax run in f32
+(the paper keeps non-GEMM ops in high precision).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import QuantConfig
+from repro.core.linear import dense_general
+from repro.distributed.sharding import shard
+from repro.core.runtime_flags import einsum as rf_einsum
+from .layers import PDef, apply_rope
+from ._attn_core import chunked_attention, _window
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """KV cache; optionally fp8 (E4M3 payload + per-(token, kv-head)
+    f32 scales — halves the decode-step HBM read, the memory-roofline
+    term that dominates decode cells)."""
+
+    k: jax.Array      # (B, C, KV, Dh) — C = min(max_len, window) for swa
+    v: jax.Array
+    k_scale: jax.Array | None   # (B, C, KV) when fp8, else None
+    v_scale: jax.Array | None
+    idx: jax.Array    # i32 scalar: absolute position of next write
+
+
+def _quant_kv(x):
+    """(B, S, KV, Dh) -> (e4m3 payload, per-(B,S,KV) f32 scale)."""
+    from repro.core.formats import E4M3_MAX, TINY, cast_fp8
+
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax, TINY) / E4M3_MAX
+    q = cast_fp8(x.astype(jnp.float32) / s[..., None], "e4m3")
+    return q, s
+
+
+def _dequant_kv(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def attn_defs(cfg):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    defs = {
+        "wq": PDef((d, h, dh), ("fsdp", "heads", None), quantized=True),
+        "wk": PDef((d, kv, dh), ("fsdp", "kv_heads", None), quantized=True),
+        "wv": PDef((d, kv, dh), ("fsdp", "kv_heads", None), quantized=True),
+        "wo": PDef((h, dh, d), ("heads", None, "fsdp"), quantized=True),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = PDef((dh,), (None,), "ones")
+        defs["k_norm"] = PDef((dh,), (None,), "ones")
+    return defs
+
+
+def cache_len(cfg, max_len: int) -> int:
+    w = _window(cfg)
+    return min(max_len, w) if w else max_len
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    c = cache_len(cfg, max_len)
+    shape = (batch, c, cfg.n_kv, cfg.head_dim)
+    if cfg.kv_cache_dtype == "fp8":
+        return KVCache(k=jnp.zeros(shape, jnp.float8_e4m3fn),
+                       v=jnp.zeros(shape, jnp.float8_e4m3fn),
+                       k_scale=jnp.zeros(shape[:-1], jnp.float32),
+                       v_scale=jnp.zeros(shape[:-1], jnp.float32),
+                       idx=jnp.zeros((), jnp.int32))
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   k_scale=None, v_scale=None,
+                   idx=jnp.zeros((), jnp.int32))
+
+
+def cache_logical(cfg) -> KVCache:
+    """Logical sharding axes for ONE layer's cache (pre-stacking).
+    The seq dim carries the model axis when kv_heads can't (resolve_spec
+    drops whichever doesn't divide)."""
+    kv = ("batch", "kv_seq", "kv_heads", None)
+    sc = ("batch", "kv_seq", "kv_heads")
+    fp8 = cfg.kv_cache_dtype == "fp8"
+    return KVCache(k=kv, v=kv, k_scale=sc if fp8 else None,
+                   v_scale=sc if fp8 else None, idx=())
+
+
+def _qk_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def _project_qkv(cfg, p, x, positions, qcfg: QuantConfig):
+    q = dense_general(x, p["wq"], qcfg)                  # (B,S,H,Dh)
+    k = dense_general(x, p["wk"], qcfg)                  # (B,S,KV,Dh)
+    v = dense_general(x, p["wv"], qcfg)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps).astype(x.dtype)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps).astype(x.dtype)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _decode_attention(cfg, q, cache: KVCache, n_valid):
+    """Single-step attention against the cache.
+
+    q: (B,1,H,Dh).  Grouped einsum (no kv-repeat): scores (B,KV,G,T).
+    """
+    b, _, h, dh = q.shape
+    kvh = cache.k.shape[2]
+    g = h // kvh
+    t = cache.k.shape[1]
+    scale = dh ** -0.5
+    qg = q.reshape(b, kvh, g, dh)
+    if cache.k_scale is not None:
+        # fp8 cache: fold the per-(token, kv-head) scale into the score
+        # (k) and the combine weight (v) instead of dequantizing the
+        # payload — the HBM read stays 1 byte/element.
+        scores = rf_einsum("bkgd,btkd->bkgt", qg, cache.k,
+                           out_dtype=jnp.float32) * scale
+        scores = scores * cache.k_scale.transpose(0, 2, 1)[:, :, None, :]
+    else:
+        scores = rf_einsum("bkgd,btkd->bkgt", qg, cache.k,
+                           out_dtype=jnp.float32) * scale
+    slot = jnp.arange(t)
+    valid = slot < jnp.minimum(n_valid, t)               # ring: all valid
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if cache.v_scale is not None:
+        wv = w * cache.v_scale.transpose(0, 2, 1)[:, :, None, :]
+        out = rf_einsum("bkgt,btkd->bkgd", wv, cache.v,
+                        out_dtype=jnp.float32)
+    else:
+        out = rf_einsum("bkgt,btkd->bkgd", w, cache.v,
+                        out_dtype=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
+    """Append S_new positions (prefill: many; decode: 1) with ring
+    semantics for window attention; fp8 caches quantize on write."""
+    fp8 = cache.k_scale is not None
+    if fp8:
+        k_new, ks_new = _quant_kv(k_new)
+        v_new, vs_new = _quant_kv(v_new)
+    c = cache.k.shape[1]
+    s_new = k_new.shape[1]
+    if s_new >= c:
+        # keep the last C positions (prefill of a window cache);
+        # ring layout: position p lives in slot p % C
+        start = (cache.idx + s_new - c) % c
+        roll = lambda x: jnp.roll(x[:, -c:].astype(x.dtype), start,
+                                  axis=1)
+        return KVCache(roll(k_new).astype(cache.k.dtype),
+                       roll(v_new).astype(cache.v.dtype),
+                       roll(ks_new) if fp8 else None,
+                       roll(vs_new) if fp8 else None,
+                       cache.idx + s_new)
+    # contiguous in-place write (decode: one slot; prefill: [idx, idx+s))
+    # via dynamic_update_slice — advanced-index scatter would lower to a
+    # full-cache f32 select copy under SPMD.  Wraparound can only occur
+    # for multi-token appends into a ring cache mid-stream, which the
+    # serving engine never does (prefill starts at idx=0; decode s=1).
+    start = cache.idx % c
+    zero = jnp.zeros((), jnp.int32)
+
+    def dus(buf, upd):
+        idxs = (zero, start) + (zero,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype),
+                                            idxs)
+
+    k = dus(cache.k, k_new)
+    v = dus(cache.v, v_new)
+    ks = dus(cache.k_scale, ks_new) if fp8 else None
+    vs = dus(cache.v_scale, vs_new) if fp8 else None
+    return KVCache(k, v, ks, vs, cache.idx + s_new)
+
+
+def attention(cfg, p, x, positions, qcfg: QuantConfig,
+              cache: KVCache | None = None, mode: str = "train"):
+    """Returns (out, new_cache).  Modes:
+      train   — chunked causal attention, no cache
+      prefill — chunked causal attention + cache fill
+      decode  — single new token against the cache
+    """
+    if mode == "decode":
+        q, k_new, v_new = _project_qkv(cfg, p, x, positions, qcfg)
+        new_cache = _cache_write(cfg, cache, k_new, v_new)
+        n_valid = new_cache.idx
+        out = _decode_attention(cfg, q, new_cache, n_valid)
+    else:
+        q, k, v = _project_qkv(cfg, p, x, positions, qcfg)
+        out = chunked_attention(cfg, q, k, v)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _cache_write(
+                cfg, init_cache(cfg, x.shape[0], cache.k.shape[1]
+                                if cache is not None else x.shape[1]),
+                k, v)
+    out = shard(out, "batch", None, "heads", None)
+    y = dense_general(out.reshape(*out.shape[:-2], -1),
+                      QTflat(p["wo"]), qcfg)
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def QTflat(wt):
+    """wo is stored (H, Dh, d); flatten to (H·Dh, d) for the GEMM."""
+    from repro.core.linear import QT
+    w = wt.w if hasattr(wt, "w") else wt
+    s = wt.s if hasattr(wt, "s") else None
+    return QT(w.reshape(-1, w.shape[-1]), s)

@@ -1,0 +1,196 @@
+"""Token-choice top-k Mixture of Experts with explicit expert parallelism.
+
+Train/prefill path (mesh present): shard_map over (pod, data, model) —
+tokens are split across *all* mesh axes for dispatch, experts live on
+the ``model`` axis, and two ``all_to_all`` collectives move token
+buffers to/from their experts (the torch-EP pattern, expressed
+jax-natively; the collectives land in the HLO where the roofline
+collective term can count them).
+
+Dispatch is sort-based (argsort by expert id + capacity truncation) —
+never materializes a (T, E, C) one-hot.  Per-device buffer is
+(E, C_local, d) with C_local = ceil(T_local·k·cf/E).
+
+Decode path (T small): masked dense-experts combine — every expert runs
+on every token.  With batch≥experts·top_k the full expert weights are
+read anyway, so the memory roofline is identical and decode stays
+simple and shardable (DESIGN.md §3).
+
+Router stays f32 and unquantized (tiny, accuracy-critical).  Expert
+GEMMs are MOSS-quantized with *per-expert* scales (vmapped qlinear).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.formats import QuantConfig
+from repro.core.linear import QT, qlinear
+from repro.distributed.sharding import shard, _active_mesh
+from .layers import PDef
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": PDef((d, e), (None, None)),          # f32, not quantized
+        "w_up": PDef((e, d, f), ("experts", "fsdp", "mlp"), quantized=True),
+        "w_gate": PDef((e, d, f), ("experts", "fsdp", "mlp"), quantized=True),
+        "w_down": PDef((e, f, d), ("experts", "mlp", "fsdp"), quantized=True),
+    }
+    return defs
+
+
+def _expert_ffn(cfg, w_up: QT, w_gate: QT, w_down: QT, x, qcfg):
+    """One expert's gated FFN on its (C, d) token buffer."""
+    up = qlinear(x, w_up, qcfg)
+    gate = qlinear(x, w_gate, qcfg)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return qlinear(h, w_down, qcfg)
+
+
+def _experts_vmapped(cfg, p, xs, qcfg):
+    """xs: (E_local, C, d) -> (E_local, C, d); per-expert quant scales."""
+    def one(w_up, w_gate, w_down, x):
+        return _expert_ffn(cfg, w_up, w_gate, w_down, x, qcfg)
+    return jax.vmap(one)(p["w_up"], p["w_gate"], p["w_down"], xs)
+
+
+def router_probs(cfg, p, x_flat):
+    """f32 router; returns (probs, aux metrics)."""
+    w = p["router"]
+    w = w.w if isinstance(w, QT) else w
+    logits = x_flat.astype(jnp.float32) @ w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return logits, probs
+
+
+def load_balance_loss(probs, ids, n_experts: int, top_k: int):
+    """Switch-style aux loss: E · Σ_e f_e · P_e."""
+    one_hot = jax.nn.one_hot(ids, n_experts, dtype=jnp.float32)  # (T,k,E)
+    f = one_hot.sum(axis=(0, 1)) / (ids.shape[0] * top_k)
+    pmean = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * pmean)
+
+
+def _dispatch_combine_local(cfg, x_loc, ids_loc, w_loc, expert_fn,
+                            capacity: int, model_axis: str | None):
+    """Per-device dispatch -> (all_to_all) -> experts -> (all_to_all) ->
+    combine.  Runs inside shard_map (or standalone without a mesh)."""
+    t_loc, d = x_loc.shape
+    k = ids_loc.shape[-1]
+    e = cfg.n_experts
+
+    flat_ids = ids_loc.reshape(-1)                       # (T·k,)
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    # position within expert group
+    group_start = jnp.searchsorted(sorted_ids, jnp.arange(e))
+    pos = jnp.arange(t_loc * k) - group_start[sorted_ids]
+    token_of = order // k
+    keep = pos < capacity
+    # scatter tokens into (E, C, d); dropped tokens overflow to a trash row
+    buf = jnp.zeros((e * capacity + 1, d), x_loc.dtype)
+    dest = jnp.where(keep, sorted_ids * capacity + pos, e * capacity)
+    buf = buf.at[dest].set(x_loc[token_of])
+    xs = buf[:-1].reshape(e, capacity, d)
+
+    if model_axis is not None:
+        xs = jax.lax.all_to_all(xs, model_axis, split_axis=0,
+                                concat_axis=1, tiled=True)
+    ys = expert_fn(xs)                                   # (E_loc, C·m, d)
+    if model_axis is not None:
+        ys = jax.lax.all_to_all(ys, model_axis, split_axis=1,
+                                concat_axis=0, tiled=True)
+
+    ybuf = jnp.concatenate(
+        [ys.reshape(e * capacity, d),
+         jnp.zeros((1, d), ys.dtype)], axis=0)
+    gathered = ybuf[dest]                                # (T·k, d) sorted
+    # unsort back to (T, k, d)
+    unsort = jnp.argsort(order, stable=True)
+    per_slot = gathered[unsort].reshape(t_loc, k, d)
+    y = jnp.einsum("tkd,tk->td", per_slot.astype(jnp.float32),
+                   w_loc.astype(jnp.float32))
+    return y.astype(x_loc.dtype)
+
+
+def _capacity(cfg, t_local: int) -> int:
+    c = int(t_local * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return -(-c // 8) * 8                                # round up to 8
+
+
+def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    logits, probs = router_probs(cfg, p, x_flat)
+    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)     # (T,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, top_ids, cfg.n_experts, cfg.top_k)
+
+    mesh = _active_mesh()
+    use_ep = (mesh is not None and mode != "decode"
+              and "model" in mesh.axis_names)
+    if mode == "decode" or (not use_ep and cfg.moe_decode_dense
+                            and t <= 4096):
+        y = _dense_moe(cfg, p, x_flat, probs, top_w, top_ids, qcfg)
+        return y.reshape(b, s, d), aux
+
+    if use_ep:
+        token_axes = tuple(a for a in ("pod", "data", "model")
+                           if a in mesh.axis_names)
+        n_tok_shards = 1
+        for a in token_axes:
+            n_tok_shards *= mesh.shape[a]
+        m = mesh.shape["model"]
+        t_loc = t // n_tok_shards
+        cap = _capacity(cfg, t_loc)
+
+        def body(x_loc, ids_loc, w_loc, w_up, w_gate, w_down):
+            # FSDP all-gather of expert weights over the data axis
+            if "data" in mesh.axis_names:
+                w_up = jax.lax.all_gather(w_up.w, "data", axis=1, tiled=True), w_up.s
+                w_gate = jax.lax.all_gather(w_gate.w, "data", axis=1, tiled=True), w_gate.s
+                w_down = jax.lax.all_gather(w_down.w, "data", axis=2, tiled=True), w_down.s
+                w_up, w_gate, w_down = (QT(*w_up), QT(*w_gate), QT(*w_down))
+            pl = {"w_up": w_up, "w_gate": w_gate, "w_down": w_down}
+            fn = lambda xs: _experts_vmapped(cfg, pl, xs, qcfg)
+            return _dispatch_combine_local(cfg, x_loc, ids_loc, w_loc, fn,
+                                           cap, "model")
+
+        tok_spec = P(token_axes, None)
+        wspec_up = P("model", "data" if "data" in mesh.axis_names else None,
+                     None)
+        wspec_down = P("model", None,
+                       "data" if "data" in mesh.axis_names else None)
+        sspec = P("model")
+        y = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(tok_spec, P(token_axes), tok_spec,
+                      QT(wspec_up, sspec), QT(wspec_up, sspec),
+                      QT(wspec_down, sspec)),
+            out_specs=tok_spec,
+            check_vma=False,
+        )(x_flat, top_ids, top_w, p["w_up"], p["w_gate"], p["w_down"])
+        return y.reshape(b, s, d), aux
+
+    # single-device fallback (smoke tests)
+    cap = _capacity(cfg, t)
+    fn = lambda xs: _experts_vmapped(cfg, p, xs, qcfg)
+    y = _dispatch_combine_local(cfg, x_flat, top_ids, top_w, fn, cap, None)
+    return y.reshape(b, s, d), aux
+
+
+def _dense_moe(cfg, p, x_flat, probs, top_w, top_ids, qcfg):
+    """Masked dense-experts combine for small T (decode)."""
+    t, d = x_flat.shape
+    combine = jnp.zeros((t, cfg.n_experts), jnp.float32).at[
+        jnp.arange(t)[:, None], top_ids].set(top_w)
+    ys = _experts_vmapped(cfg, p, jnp.broadcast_to(x_flat, (cfg.n_experts, t, d)),
+                          qcfg)                           # (E,T,d)
+    y = jnp.einsum("etd,te->td", ys.astype(jnp.float32), combine)
+    return y.astype(x_flat.dtype)

@@ -1,0 +1,145 @@
+"""RecurrentGemma (Griffin) recurrent block: temporal conv + RG-LRU.
+
+The RG-LRU recurrence is elementwise —
+    r_t = σ(W_a u_t + b_a)          (recurrence gate)
+    i_t = σ(W_i u_t + b_i)          (input gate)
+    log a_t = -c · softplus(Λ) · r_t            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+— a linear scan, computed chunk-parallel: within-chunk associative scan,
+lax.scan carrying h across chunks (bounded memory for prefill_32k /
+long_500k).  Gates and projections are MOSS-quantized GEMMs; the
+recurrence itself is elementwise f32 (DESIGN.md §6: not a GEMM, outside
+the paper's quantization scope).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import QuantConfig
+from repro.core.linear import QT, qlinear
+from repro.distributed.sharding import shard
+from .layers import PDef
+
+_C = 8.0
+_CHUNK = 256
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, lru)  f32
+    conv: jax.Array       # (B, W-1, lru) last conv inputs
+    idx: jax.Array
+
+
+def rglru_defs(cfg):
+    d, lru, w = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "w_x": PDef((d, lru), ("fsdp", "lru"), quantized=True),
+        "w_gate_branch": PDef((d, lru), ("fsdp", "lru"), quantized=True),
+        "w_out": PDef((lru, d), ("lru", "fsdp"), quantized=True),
+        "conv_w": PDef((w, lru), ("conv", "lru"), "small"),
+        "conv_b": PDef((lru,), ("lru",), "zeros"),
+        "w_a": PDef((lru, lru), ("fsdp", "lru"), quantized=True),
+        "b_a": PDef((lru,), ("lru",), "zeros"),
+        "w_i": PDef((lru, lru), ("fsdp", "lru"), quantized=True),
+        "b_i": PDef((lru,), ("lru",), "zeros"),
+        "lambda_p": PDef((lru,), ("lru",), "ones"),
+    }
+
+
+def init_rglru_state(cfg, batch: int) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                       jnp.bfloat16),
+        idx=jnp.zeros((), jnp.int32))
+
+
+def cache_logical(cfg) -> RGLRUState:
+    return RGLRUState(h=("batch", "lru"), conv=("batch", None, "lru"),
+                      idx=())
+
+
+def _causal_conv(p, u, prev):
+    """Depthwise causal conv, width W.  prev: (B, W-1, lru) history."""
+    w = p["conv_w"].w if isinstance(p["conv_w"], QT) else p["conv_w"]
+    b = p["conv_b"].w if isinstance(p["conv_b"], QT) else p["conv_b"]
+    width = w.shape[0]
+    full = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u, shape=u.shape).astype(jnp.float32)
+    s = u.shape[1]
+    for i in range(width):
+        sl = full[:, width - 1 - i: width - 1 - i + s]
+        out = out + sl.astype(jnp.float32) * w[width - 1 - i].astype(jnp.float32)
+    new_prev = full[:, -(width - 1):]
+    return (out + b.astype(jnp.float32)).astype(u.dtype), new_prev
+
+
+def _lru_scan(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t over axis 1, h0: (B, lru).  Chunked:
+    within-chunk associative scan + per-chunk carry."""
+    B, S, L = a.shape
+    chunk = min(_CHUNK, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    ac = a.reshape(B, n, chunk, L).transpose(1, 0, 2, 3)
+    bc = b.reshape(B, n, chunk, L).transpose(1, 0, 2, 3)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    def chunk_step(h, xs):
+        a_i, b_i = xs                        # (B, chunk, L)
+        cum_a, cum_b = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        h_t = cum_b + cum_a * h[:, None, :]
+        return h_t[:, -1, :], h_t
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, n * chunk, L)[:, :S]
+    return hs, h_last
+
+
+def rglru_block(cfg, p, x, qcfg: QuantConfig,
+                state: RGLRUState | None = None, mode: str = "train"):
+    """x: (B,S,d) -> (y, new_state)."""
+    b, s, _ = x.shape
+    gate = qlinear(x, p["w_gate_branch"], qcfg)
+    gate = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    u = qlinear(x, p["w_x"], qcfg)
+    u = shard(u, "batch", None, "lru")
+
+    prev = (state.conv if state is not None
+            else jnp.zeros((b, cfg.conv_width - 1, cfg.lru_width), x.dtype))
+    u, conv_state = _causal_conv(p, u, prev)
+
+    r = jax.nn.sigmoid(qlinear(u, p["w_a"], qcfg).astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(qlinear(u, p["w_i"], qcfg).astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, cfg.lru_width), jnp.float32))
+    if mode == "decode" and s == 1:
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        hs = h[:, None, :]
+        h_last = h
+    else:
+        hs, h_last = _lru_scan(a, gated_in, h0)
+
+    y = (hs.astype(x.dtype) * gate)
+    y = qlinear(y, p["w_out"], qcfg)
+    new_state = RGLRUState(
+        h=h_last, conv=conv_state.astype(jnp.bfloat16),
+        idx=(state.idx if state is not None else jnp.zeros((), jnp.int32)) + s)
+    return shard(y, "batch", "seq", "embed"), new_state

@@ -1,0 +1,231 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent decay.
+
+Recurrence per head (head dim 64):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+computed chunk-parallel (FLA-style): within a chunk the pairwise decay
+factorizes as (r_i e^{C_{i-1}}) · (k_j e^{-C_j}) with C the inclusive
+per-channel cumulative log-decay, so intra-chunk work is two MXU-shaped
+matmuls; the inter-chunk state is carried by lax.scan.  log-decay is
+clamped to [-5, -1e-4] (chunk 16) so the factored exponentials stay in
+f32 range — the same stability trick production linear-attention kernels
+use.
+
+Projections (r/k/v/g/o, channel-mix) are MOSS-quantized GEMMs; the WKV
+state math is elementwise/outer-product f32 (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import QuantConfig
+from repro.core.linear import QT, qlinear
+from repro.core.runtime_flags import einsum as rf_einsum
+from repro.distributed.sharding import shard
+from .layers import PDef
+
+_CHUNK = 16
+_LW_MIN, _LW_MAX = -5.0, -1e-4
+
+
+class RWKVState(NamedTuple):
+    x_tm: jax.Array     # (B, d)  last input of time-mix
+    x_cm: jax.Array     # (B, d)  last input of channel-mix
+    S: jax.Array        # (B, H, dk, dv) wkv state, f32
+    idx: jax.Array
+
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def timemix_defs(cfg):
+    d = cfg.d_model
+    rank = cfg.ddlerp_rank
+    dr = cfg.decay_rank
+    defs = {
+        "mu_base": PDef((d,), (None,), "small"),
+        "mu": PDef((len(_MIX), d), (None, None), "small"),
+        "ddlerp_w1": PDef((d, len(_MIX) * rank), ("fsdp", None),
+                          quantized=True),
+        "ddlerp_w2": PDef((len(_MIX), rank, d), (None, None, "fsdp"),
+                          "small"),
+        "w_r": PDef((d, d), ("fsdp", "heads"), quantized=True),
+        "w_k": PDef((d, d), ("fsdp", "heads"), quantized=True),
+        "w_v": PDef((d, d), ("fsdp", "heads"), quantized=True),
+        "w_g": PDef((d, d), ("fsdp", "heads"), quantized=True),
+        "w_o": PDef((d, d), ("heads", "fsdp"), quantized=True),
+        "decay_base": PDef((d,), (None,), "small"),
+        "decay_w1": PDef((d, dr), ("fsdp", None), quantized=True),
+        "decay_w2": PDef((dr, d), (None, "fsdp"), "small"),
+        "bonus_u": PDef((d,), (None,), "small"),
+        "ln_scale": PDef((d,), (None,), "ones"),
+        "ln_bias": PDef((d,), (None,), "zeros"),
+    }
+    return defs
+
+
+def chanmix_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": PDef((d,), (None,), "small"),
+        "mu_r": PDef((d,), (None,), "small"),
+        "w_k": PDef((d, f), ("fsdp", "mlp"), quantized=True),
+        "w_v": PDef((f, d), ("mlp", "fsdp"), quantized=True),
+        "w_r": PDef((d, d), ("fsdp", "fsdp"), quantized=True),
+    }
+
+
+def init_rwkv_state(cfg, batch: int) -> RWKVState:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    return RWKVState(
+        x_tm=jnp.zeros((batch, d), jnp.bfloat16),
+        x_cm=jnp.zeros((batch, d), jnp.bfloat16),
+        S=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        idx=jnp.zeros((), jnp.int32))
+
+
+def cache_logical(cfg) -> RWKVState:
+    return RWKVState(x_tm=("batch", None), x_cm=("batch", None),
+                     S=("batch", "heads", None, None), idx=())
+
+
+def _token_shift(x, x_prev):
+    """shift right along seq: position t sees x_{t-1}; x_prev fills t=0."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _raw(p):
+    return p.w if isinstance(p, QT) else p
+
+
+def _wkv_chunked(r, k, v, lw, u, S0):
+    """r,k,v: (B,T,H,dh); lw: (B,T,H,dh) log-decay; u: (H,dh);
+    S0: (B,H,dh,dh).  Returns (y (B,T,H,dh), S_last)."""
+    b, t, h, dh = r.shape
+    chunk = min(_CHUNK, t)
+    n = -(-t // chunk)
+    pad = n * chunk - t
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def resh(x):
+        return x.reshape(b, n, chunk, h, dh).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(resh, (r, k, v, lw))   # (n, B, H, L, dh)
+
+    def chunk_step(S, xs):
+        ri, ki, vi, lwi = (x.astype(jnp.float32) for x in xs)
+        C = jnp.cumsum(lwi, axis=-2)                       # inclusive
+        C_prev = C - lwi                                    # C_{i-1}-style
+        r_dec = ri * jnp.exp(C_prev)                        # (B,H,L,dh)
+        k_dec = ki * jnp.exp(-C)
+        # inter-chunk: y_i += (r_i e^{C_{i-1}}) S_prev
+        y_inter = jnp.einsum("bhld,bhdv->bhlv", r_dec, S)
+        # intra-chunk: scores[i,j] = Σ_d r_dec[i,d] k_dec[j,d] (j < i)
+        scores = jnp.einsum("bhld,bhmd->bhlm", r_dec, k_dec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y_intra = jnp.einsum("bhlm,bhmv->bhlv", scores, vi)
+        # current-token bonus: (r_i ⊙ u ⊙ k_i) v_i
+        bonus = jnp.einsum("bhld,bhld->bhl", ri * u[None, :, None, :], ki)
+        y = y_inter + y_intra + bonus[..., None] * vi
+        # state update: S' = diag(e^{C_L}) S + Σ_j e^{C_L - C_j} k_j v_j
+        decay_all = jnp.exp(C[..., -1:, :])                # (B,H,1,dh)
+        k_fold = ki * jnp.exp(C[..., -1:, :] - C)
+        S_new = (S * decay_all.squeeze(-2)[..., None]
+                 + jnp.einsum("bhld,bhlv->bhdv", k_fold, vi))
+        return S_new, y
+
+    S_last, ys = jax.lax.scan(chunk_step, S0.astype(jnp.float32),
+                              (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, n * chunk, h, dh)[:, :t]
+    return y, S_last
+
+
+def _wkv_step(r, k, v, lw, u, S0):
+    """Single-token recurrence (decode).  r,k,v,lw: (B,1,H,dh)."""
+    ri, ki, vi, lwi = (x[:, 0].astype(jnp.float32) for x in (r, k, v, lw))
+    y = (jnp.einsum("bhd,bhdv->bhv", ri, S0)
+         + jnp.einsum("bhd,bhd->bh", ri * u[None], ki)[..., None] * vi)
+    S_new = S0 * jnp.exp(lwi)[..., None] \
+        + jnp.einsum("bhd,bhv->bhdv", ki, vi)
+    return y[:, None], S_new
+
+
+def _group_norm(y, scale, bias, eps=64e-5):
+    """Per-head layernorm over dh (rwkv 'ln_x')."""
+    mu = y.mean(axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    b_, t, h, dh = y.shape
+    return (yn.reshape(b_, t, -1) * scale + bias).reshape(b_, t, h, dh)
+
+
+def time_mix(cfg, p, x, qcfg: QuantConfig, state: RWKVState, mode: str):
+    b, s, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    x_prev = state.x_tm
+    xs = _token_shift(x, x_prev)
+    xx = (xs - x).astype(jnp.float32)
+
+    # data-dependent token-shift (ddlerp)
+    xxx = x.astype(jnp.float32) + xx * _raw(p["mu_base"])
+    lora = jnp.tanh(qlinear(xxx.astype(x.dtype), p["ddlerp_w1"], qcfg)
+                    .astype(jnp.float32))
+    lora = lora.reshape(b, s, len(_MIX), cfg.ddlerp_rank)
+    offs = jnp.einsum("bsmr,mrd->bsmd", lora, _raw(p["ddlerp_w2"])
+                      .astype(jnp.float32))
+    mixed = {}
+    for i, name in enumerate(_MIX):
+        m = _raw(p["mu"])[i] + offs[:, :, i]
+        mixed[name] = (x.astype(jnp.float32) + xx * m).astype(x.dtype)
+
+    r = qlinear(mixed["r"], p["w_r"], qcfg).reshape(b, s, h, dh)
+    k = qlinear(mixed["k"], p["w_k"], qcfg).reshape(b, s, h, dh)
+    v = qlinear(mixed["v"], p["w_v"], qcfg).reshape(b, s, h, dh)
+    g = qlinear(mixed["g"], p["w_g"], qcfg)
+
+    dd = jnp.tanh(qlinear(mixed["w"], p["decay_w1"], qcfg)
+                  .astype(jnp.float32))
+    dd = dd @ _raw(p["decay_w2"]).astype(jnp.float32)
+    lw = -jnp.exp(_raw(p["decay_base"]).astype(jnp.float32) + dd)
+    lw = jnp.clip(lw, _LW_MIN, _LW_MAX).reshape(b, s, h, dh)
+    u = _raw(p["bonus_u"]).astype(jnp.float32).reshape(h, dh)
+
+    if mode == "decode" and s == 1:
+        y, S_new = _wkv_step(r, k, v, lw, u, state.S)
+    else:
+        y, S_new = _wkv_chunked(r, k, v, lw, u, state.S)
+
+    y = _group_norm(y, _raw(p["ln_scale"]).astype(jnp.float32),
+                    _raw(p["ln_bias"]).astype(jnp.float32))
+    y = (y.reshape(b, s, d)
+         * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = qlinear(y, p["w_o"], qcfg)
+    new_state = state._replace(x_tm=x[:, -1].astype(jnp.bfloat16), S=S_new)
+    return shard(out, "batch", "seq", "embed"), new_state
+
+
+def channel_mix(cfg, p, x, qcfg: QuantConfig, state: RWKVState, mode: str):
+    xs = _token_shift(x, state.x_cm)
+    xx = (xs - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + xx * _raw(p["mu_k"])).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + xx * _raw(p["mu_r"])).astype(x.dtype)
+    kk = qlinear(xk, p["w_k"], qcfg)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kk = shard(kk, "batch", None, "mlp")
+    vv = qlinear(kk, p["w_v"], qcfg)
+    rr = jax.nn.sigmoid(qlinear(xr, p["w_r"], qcfg).astype(jnp.float32))
+    out = (rr * vv.astype(jnp.float32)).astype(x.dtype)
+    new_state = state._replace(x_cm=x[:, -1].astype(jnp.bfloat16))
+    return shard(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,73 @@
+"""AdamW (paper Eq. 1) — own implementation (no optax dependency).
+
+The bounded-update property (paper Thm 2: |ΔW_t| ≤ η) that MOSS's
+automatic scaling relies on is a property of this update rule; the test
+suite checks it empirically against this implementation.
+
+State is a pytree-of-OptState threaded through the jitted train step and
+sharded like the parameters (ZeRO: moments inherit the param sharding,
+which is FSDP×TP here).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: jax.Array
+    nu: jax.Array
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95          # paper: LLM-typical beta2
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init_opt_state(params):
+    return jax.tree.map(
+        lambda w: OptState(mu=jnp.zeros_like(w, jnp.float32),
+                           nu=jnp.zeros_like(w, jnp.float32)), params)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, step, lr):
+    """Returns (new_params, new_state).  step is 1-based inside."""
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(w, g, st):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * st.mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * st.nu + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = mu / c1
+        vhat = nu / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        w32 = w.astype(jnp.float32)
+        w_new = w32 - lr * (delta + cfg.weight_decay * w32)
+        return w_new.astype(w.dtype), OptState(mu=mu, nu=nu)
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    s_leaves = treedef.flatten_up_to(state)
+    out = [upd(w, g, st) for w, g, st in zip(p_leaves, g_leaves, s_leaves)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, new_state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor
+                                   ).astype(g.dtype), grads), norm

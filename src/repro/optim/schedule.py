@@ -1,0 +1,20 @@
+"""LR schedules (paper §4.1: cosine decay to 10% of peak, linear warmup)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup_steps: int,
+                       total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    floor = peak_lr * final_frac
+    cos = floor + 0.5 * (peak_lr - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant_lr(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)

@@ -1,0 +1,276 @@
+"""Jitted step functions: train_step (fwd+bwd+AdamW+automatic scaling),
+prefill_step, decode_step — plus TrainState plumbing.
+
+The MOSS integration points:
+  1. before the forward, predicted per-tensor weight scales are computed
+     from ``ScaleState`` (no max-reductions — paper Eq. 10);
+  2. all linear GEMMs run the two-level-MX custom-vjp path;
+  3. after the optimizer update, scale states advance one step, with a
+     real max-reduction only on the lax.cond refresh branch;
+  4. optional FP8-compressed gradient all-reduce (paper Table 5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autoscale import ScaleState
+from repro.core.formats import QuantConfig, fp8_max, TINY
+from repro.distributed import compression
+from repro.distributed.sharding import shard
+from repro.models.layers import quant_mask_tree, wrap_qt, wrap_qt_nojit
+from repro.models.transformer import ce_loss, forward, init_caches, model_defs
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_update,
+    clip_by_global_norm,
+    init_opt_state,
+)
+from repro.optim.schedule import cosine_with_warmup
+
+
+class TrainState(NamedTuple):
+    params: Any               # f32 master weights
+    opt: Any                  # OptState tree
+    scale_s0: Any             # per-leaf predicted-scale base (f32)
+    scale_t: Any              # per-leaf steps-since-refresh (i32)
+    comm_residual: Any        # fp8-allreduce error feedback (or None)
+    step: jax.Array           # i32
+
+
+class TrainHParams(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 2000
+    total_steps: int = 100_000
+    grad_clip: float = 1.0
+    aux_coef: float = 0.01
+    microbatches: int = 1     # gradient accumulation (activation memory)
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def _scale_dims(defs):
+    """Leading dims that get independent fp8 scales: stacked layer dim
+    (+ expert dim).  Derived from PDef logical names."""
+    from repro.models.layers import PDef
+
+    def dims(d: PDef):
+        n = 0
+        for name in d.logical:
+            if name in ("layers", "experts"):
+                n += 1
+            else:
+                break
+        return n
+
+    return jax.tree.map(dims, defs, is_leaf=lambda x: isinstance(x, PDef))
+
+
+def init_scales(defs, params, qcfg: QuantConfig):
+    """s0 per (layer, expert) slice: amax over the non-stacked dims."""
+    sdims = _scale_dims(defs)
+
+    def init(w, nd):
+        axes = tuple(range(nd, w.ndim))
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axes)
+        return jnp.maximum(amax, TINY) / fp8_max(qcfg.fwd_format)
+
+    s0 = jax.tree.map(init, params, sdims)
+    t = jax.tree.map(lambda w: jnp.zeros((), jnp.int32), params)
+    return s0, t
+
+
+def predicted_scales(s0, t, lr, qcfg: QuantConfig):
+    def pred(s, ts):
+        return s + lr * ts.astype(jnp.float32) / fp8_max(qcfg.fwd_format)
+    return jax.tree.map(pred, s0, t)
+
+
+def advance_scales(defs, s0, t, params, qcfg: QuantConfig):
+    """One step forward; lax.cond refresh at the interval (the untaken
+    branch reads no weight bytes — the paper's Table 1 saving)."""
+    sdims = _scale_dims(defs)
+
+    def adv(s, ts, w, nd):
+        ts_next = ts + 1
+
+        def refresh(_):
+            axes = tuple(range(nd, w.ndim))
+            amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axes)
+            return (jnp.maximum(amax, TINY) / fp8_max(qcfg.fwd_format),
+                    jnp.zeros((), jnp.int32))
+
+        def keep(_):
+            return (s, ts_next)
+
+        if qcfg.weight_scaling in ("jit", "delayed"):
+            return refresh(None)
+        return jax.lax.cond(ts_next >= qcfg.rescale_interval,
+                            refresh, keep, operand=None)
+
+    out = jax.tree.map(adv, s0, t, params, sdims)
+    new_s0 = jax.tree.map(lambda o: o[0], out,
+                          is_leaf=lambda o: isinstance(o, tuple))
+    new_t = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    return new_s0, new_t
+
+
+def init_train_state(cfg, hp: TrainHParams, key, params=None):
+    from repro.models.layers import init_tree
+
+    defs = model_defs(cfg)
+    if params is None:
+        params = init_tree(defs, key)
+    opt = init_opt_state(params)
+    qcfg = cfg.quant
+    s0, t = init_scales(defs, params, qcfg)
+    res = (compression.init_residuals(params)
+           if qcfg.grad_comm_fp8 else None)
+    return TrainState(params=params, opt=opt, scale_s0=s0, scale_t=t,
+                      comm_residual=res, step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg, hp: TrainHParams, mesh=None):
+    """Builds the jittable train step for arch ``cfg``."""
+    defs = model_defs(cfg)
+    mask = quant_mask_tree(defs)
+    qcfg = cfg.quant
+
+    def train_step(state: TrainState, batch: dict):
+        lr = cosine_with_warmup(state.step, peak_lr=hp.peak_lr,
+                                warmup_steps=hp.warmup_steps,
+                                total_steps=hp.total_steps)
+
+        if qcfg.quantized and qcfg.weight_scaling == "auto":
+            scales = predicted_scales(state.scale_s0, state.scale_t, lr,
+                                      qcfg)
+        else:
+            scales = jax.tree.map(lambda w: None, state.params)
+
+        def loss_fn(params, mb):
+            if qcfg.quantized and qcfg.weight_scaling == "auto":
+                qp = wrap_qt(params, scales, mask)
+            else:
+                qp = wrap_qt_nojit(params, mask)
+            logits, _, aux = forward(cfg, qcfg, qp, mb, mode="train")
+            loss = ce_loss(cfg, logits, mb["labels"], mb.get("mask"))
+            return loss + hp.aux_coef * aux, (loss, aux)
+
+        n_mb = hp.microbatches
+        if n_mb <= 1:
+            (_, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            # gradient accumulation: scan over microbatches (bounds the
+            # per-layer activation carry at B/n_mb)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n_mb, x.shape[0] // n_mb,
+                                    *x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (_, (l, a)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + l, aux_acc + a), None
+
+            g0 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32),
+                              state.params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss, aux = loss / n_mb, aux / n_mb
+
+        if mesh is not None:
+            # constrain gradients to the parameter sharding so GSPMD
+            # emits reduce-scatters instead of full all-reduces (§Perf)
+            from repro.distributed.sharding import resolve_spec
+            from repro.models.layers import PDef
+
+            def _gspec(d):
+                return jax.sharding.NamedSharding(
+                    mesh, resolve_spec(d.logical, mesh, d.shape))
+
+            gspecs = jax.tree.map(_gspec, defs,
+                                  is_leaf=lambda x: isinstance(x, PDef))
+            grads = jax.tree.map(
+                jax.lax.with_sharding_constraint, grads, gspecs)
+
+        if qcfg.grad_comm_fp8 and mesh is not None:
+            grads, new_res = compression.fp8_allreduce_grads(
+                grads, state.comm_residual, mesh)
+        else:
+            new_res = state.comm_residual
+
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        new_params, new_opt = adamw_update(hp.adamw, state.params, grads,
+                                           state.opt, state.step, lr)
+        if qcfg.quantized:
+            new_s0, new_t = advance_scales(defs, state.scale_s0,
+                                           state.scale_t, new_params, qcfg)
+        else:
+            new_s0, new_t = state.scale_s0, state.scale_t
+
+        metrics = {"loss": loss, "aux": aux, "lr": lr, "grad_norm": gnorm}
+        return TrainState(params=new_params, opt=new_opt, scale_s0=new_s0,
+                          scale_t=new_t, comm_residual=new_res,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    defs = model_defs(cfg)
+    mask = quant_mask_tree(defs)
+    qcfg = cfg.quant
+
+    def eval_step(params, batch):
+        qp = wrap_qt_nojit(params, mask)
+        logits, _, _ = forward(cfg, qcfg, qp, batch, mode="train")
+        return ce_loss(cfg, logits, batch["labels"], batch.get("mask"))
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg, max_len: int):
+    defs = model_defs(cfg)
+    mask = quant_mask_tree(defs)
+    qcfg = cfg.quant
+
+    def prefill_step(params, batch):
+        qp = wrap_qt_nojit(params, mask)
+        b = (batch["tokens"].shape[0] if "tokens" in batch
+             else batch["embeds"].shape[0])
+        caches = init_caches(cfg, b, max_len)
+        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
+                                    mode="prefill")
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    defs = model_defs(cfg)
+    mask = quant_mask_tree(defs)
+    qcfg = cfg.quant
+
+    def decode_step(params, caches, tokens):
+        """tokens: (B, 1) int32 (or embeds (B,1,d)) -> next logits."""
+        qp = wrap_qt_nojit(params, mask)
+        batch = ({"embeds": tokens} if cfg.input_mode == "embeddings"
+                 and tokens.ndim == 3 else {"tokens": tokens})
+        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
+                                    mode="decode")
+        return logits, caches
+
+    return decode_step

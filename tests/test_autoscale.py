@@ -1,0 +1,102 @@
+"""Automatic scaling tests (paper §3.2, Thm 2, Fig 4, Eq 10)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autoscale import (
+    init_scale_state,
+    predicted_scale,
+    update_scale_state,
+)
+from repro.core.formats import E4M3_MAX, MOSS_CONFIG, QuantConfig
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+class TestTheorem2:
+    """|ΔW_t| ≤ η for AdamW (the bound automatic scaling relies on)."""
+
+    def test_update_bounded_by_lr(self):
+        key = jax.random.PRNGKey(0)
+        w = {"w": jax.random.normal(key, (64, 64))}
+        opt = init_opt_state(w)
+        cfg = AdamWConfig(weight_decay=0.0)
+        lr = 1e-2
+        rng = np.random.default_rng(0)
+        for t in range(25):
+            # adversarial gradients: huge, sparse, sign-flipping
+            g = {"w": jnp.asarray(
+                rng.normal(size=(64, 64)) * 10.0 ** rng.integers(-3, 4),
+                jnp.float32)}
+            w_new, opt = adamw_update(cfg, w, g, opt,
+                                      jnp.asarray(t, jnp.int32),
+                                      jnp.float32(lr))
+            delta = jnp.abs(w_new["w"] - w["w"]).max()
+            # paper Eq 8: bounded by eta * (1-b1^t)/sqrt(1-b2^t) <= ~1.4eta
+            bound = lr * max(1.0, (1 - 0.9 ** (t + 1))
+                             / np.sqrt(1 - 0.95 ** (t + 1))) + 1e-7
+            assert float(delta) <= bound * 1.01, (t, float(delta), bound)
+            w = w_new
+
+    def test_weight_growth_bound(self):
+        """max|W_t| <= max|W_0| + eta*t  (the Eq 10 premise)."""
+        key = jax.random.PRNGKey(1)
+        w = {"w": jax.random.normal(key, (32, 32)) * 0.02}
+        w0_max = float(jnp.abs(w["w"]).max())
+        opt = init_opt_state(w)
+        cfg = AdamWConfig(weight_decay=0.0)
+        lr = 5e-3
+        for t in range(30):
+            g = {"w": jax.random.normal(jax.random.fold_in(key, t),
+                                        (32, 32))}
+            w, opt = adamw_update(cfg, w, g, opt,
+                                  jnp.asarray(t, jnp.int32),
+                                  jnp.float32(lr))
+            assert float(jnp.abs(w["w"]).max()) <= \
+                w0_max + lr * (t + 1) * 1.4 + 1e-6
+
+
+class TestAutomaticScaling:
+    def test_predicted_scale_upper_bounds_jit_scale(self):
+        """Paper Fig 4: the predicted trajectory sits above just-in-time
+        scaling, so quantized weights never overflow."""
+        key = jax.random.PRNGKey(2)
+        w = {"w": jax.random.normal(key, (64, 64)) * 0.02}
+        opt = init_opt_state(w)
+        ocfg = AdamWConfig(weight_decay=0.0)
+        qcfg = MOSS_CONFIG
+        lr = 1e-3
+        st = init_scale_state(w["w"], qcfg)
+        for t in range(40):
+            g = {"w": jax.random.normal(jax.random.fold_in(key, t),
+                                        (64, 64))}
+            w, opt = adamw_update(ocfg, w, g, opt,
+                                  jnp.asarray(t, jnp.int32),
+                                  jnp.float32(lr))
+            st = update_scale_state(st, w["w"], qcfg)
+            pred = predicted_scale(st, jnp.float32(lr), qcfg)
+            jit_scale = float(jnp.abs(w["w"]).max()) / E4M3_MAX
+            assert float(pred) >= jit_scale * (1 - 1e-5), t
+            # quantized weights stay in range under the predicted scale
+            q = jnp.abs(w["w"] / pred).max()
+            assert float(q) <= E4M3_MAX
+
+    def test_interval_refresh(self):
+        qcfg = QuantConfig(mode="moss", weight_scaling="auto",
+                           rescale_interval=5)
+        w = jnp.ones((8, 8))
+        st = init_scale_state(w, qcfg)
+        for t in range(4):
+            st = update_scale_state(st, w, qcfg)
+            assert int(st.steps_since) == t + 1
+        st = update_scale_state(st, w * 3.0, qcfg)   # 5th step: refresh
+        assert int(st.steps_since) == 0
+        assert abs(float(st.s0) - 3.0 / E4M3_MAX) < 1e-9
+
+    def test_jit_mode_refreshes_every_step(self):
+        qcfg = QuantConfig(mode="moss", weight_scaling="jit")
+        st = init_scale_state(jnp.ones((4, 4)), qcfg)
+        st = update_scale_state(st, jnp.ones((4, 4)) * 7.0, qcfg)
+        assert abs(float(st.s0) - 7.0 / E4M3_MAX) < 1e-9
+        assert int(st.steps_since) == 0
