@@ -71,15 +71,14 @@ def bench_table1_autoscale():
 # ---------------------------------------------------------------------------
 
 
-def bench_table2_throughput():
+def bench_table2_throughput(B: int = 8, S: int = 128, iters: int = 5):
     from repro.configs.registry import get_config
     from repro.data.pipeline import DataConfig, SyntheticLM
     from repro.launch.train import quant_from_name
     from repro.train.steps import (TrainHParams, init_train_state,
                                    make_train_step)
 
-    B, S = 8, 128
-    for quant in ["bf16", "per_group", "moss"]:
+    for quant in ["bf16", "per_tensor", "per_group", "moss"]:
         cfg = get_config("olmo-7b", smoke=True).replace(
             quant=quant_from_name(quant))
         hp = TrainHParams(peak_lr=1e-3, warmup_steps=5, total_steps=100)
@@ -89,7 +88,6 @@ def bench_table2_throughput():
         step = jax.jit(make_train_step(cfg, hp), donate_argnums=(0,))
         state, _ = step(state, data.batch_for_step(0))   # compile
         t0 = time.perf_counter()
-        iters = 5
         for i in range(iters):
             state, m = step(state, data.batch_for_step(i + 1))
         jax.block_until_ready(m["loss"])
@@ -247,10 +245,54 @@ def bench_table9_interval():
             f"final_loss_{np.mean(losses[-5:]):.4f}")
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# Kernel-dispatch timing: the same MOSS GEMM through each backend of
+# repro.kernels.dispatch (ref = jnp reference; interpret = Pallas
+# kernels under the interpreter — kernel-path validation, not a speed
+# claim; pallas-native requires a TPU).
+# ---------------------------------------------------------------------------
+
+
+def bench_dispatch_backends(m=256, n=256, k=1024):
+    from repro.core.quant import quant_mx, quant_per_tensor
+    from repro.core.runtime_flags import kernel_backend
+    from repro.kernels import dispatch
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n),
+                          jnp.float32) * 0.02
+    xq, wq = quant_mx(x), quant_per_tensor(w)
+    backends = ["ref", "interpret"]
+    if kernel_backend() == "pallas":
+        backends.append("pallas")
+    for backend in backends:
+        fn = jax.jit(lambda q, e, s: dispatch.mx_matmul(
+            type(xq)(q, e, s), wq, jnp.bfloat16, backend=backend))
+        us = _timeit(fn, xq.q, xq.sexp, xq.s, iters=3, warmup=1)
+        row(f"dispatch_mx_matmul_{backend}_{m}x{n}x{k}", us)
+        ffn = jax.jit(lambda xx: dispatch.fused_quant_matmul(
+            xx, wq, out_dtype=jnp.bfloat16, backend=backend)[0])
+        us = _timeit(ffn, x, iters=3, warmup=1)
+        row(f"dispatch_fused_quant_matmul_{backend}_{m}x{n}x{k}", us)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced set: dispatch backends + per-mode "
+                         "train-step timings (CI smoke job)")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
+    if args.smoke:
+        bench_dispatch_backends(m=128, n=128, k=512)
+        bench_table2_throughput(B=4, S=64, iters=2)
+        return
     bench_table1_autoscale()
     bench_table7_snr()
+    bench_dispatch_backends()
     bench_table6_gemm()
     bench_table5_memory_comm()
     bench_table2_throughput()

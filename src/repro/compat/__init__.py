@@ -1,0 +1,2 @@
+# Version-compat shims isolating the repo from breaking upstream API
+# changes.  Everything jax-version-dependent goes through compat.jaxapi.

@@ -1,0 +1,159 @@
+"""JAX version-compat shim — single choke point for APIs that moved
+between jax 0.4.x and 0.5+/0.6+.
+
+The pinned toolchain is jax 0.4.37; newer jax renamed or added:
+
+  =====================================  ==================================
+  newer jax                              0.4.37 equivalent
+  =====================================  ==================================
+  ``jax.sharding.AxisType``              (absent — meshes are all "auto")
+  ``jax.make_mesh(..., axis_types=)``    ``jax.make_mesh(shape, names)``
+  ``jax.sharding.get_abstract_mesh()``   ``jax._src.mesh.thread_resources``
+  ``jax.shard_map(check_vma=)``          ``jax.experimental.shard_map``
+                                         ``.shard_map(check_rep=)``
+  ``pallas.tpu.CompilerParams``          ``pallas.tpu.TPUCompilerParams``
+  =====================================  ==================================
+
+Import from here, never feature-test at call sites:
+
+    from repro.compat.jaxapi import AxisType, make_mesh, shard_map
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+
+__all__ = [
+    "AxisType",
+    "HAS_AXIS_TYPES",
+    "abstract_mesh",
+    "cost_analysis",
+    "make_mesh",
+    "mesh_from_devices",
+    "pallas_tpu_compiler_params",
+    "shard_map",
+]
+
+
+# --------------------------------------------------------------------------
+# AxisType / axis_types kwarg
+# --------------------------------------------------------------------------
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: every mesh axis behaves like "Auto"
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+def _axis_types_kwargs(axis_types, n_axes: int) -> dict[str, Any]:
+    if not HAS_AXIS_TYPES:
+        return {}
+    if axis_types is None:
+        axis_types = (AxisType.Auto,) * n_axes
+    return {"axis_types": axis_types}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with the ``axis_types`` kwarg dropped on jax
+    versions that don't know it (where all axes are implicitly Auto)."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         **_axis_types_kwargs(axis_types, len(axis_names)))
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str],
+                      axis_types=None) -> jax.sharding.Mesh:
+    """``Mesh(devices, names)`` from an explicit (nested) device array,
+    portable across the axis_types API change."""
+    dev = np.asarray(devices)
+    return jax.sharding.Mesh(
+        dev, tuple(axis_names),
+        **_axis_types_kwargs(axis_types, len(axis_names)))
+
+
+# --------------------------------------------------------------------------
+# Active-mesh introspection
+# --------------------------------------------------------------------------
+
+
+def abstract_mesh() -> jax.sharding.Mesh | None:
+    """The mesh of the enclosing ``with mesh:`` scope, or None.
+
+    Newer jax exposes this as ``jax.sharding.get_abstract_mesh()``; on
+    0.4.x the same information lives in the thread-local resource env.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        am = get()
+        if am is not None and not am.empty:
+            return am
+        return None
+    from jax._src import mesh as mesh_lib  # 0.4.x fallback
+
+    pm = mesh_lib.thread_resources.env.physical_mesh
+    if pm is not None and not pm.empty:
+        return pm
+    return None
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        # check_vma (varying-mesh-axes) is the successor of check_rep
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+# --------------------------------------------------------------------------
+# Compiled-executable cost analysis
+# --------------------------------------------------------------------------
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict.
+
+    jax 0.4.x returns a one-element list of per-program dicts; newer jax
+    returns the dict directly.  Returns {} when XLA provides nothing.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params
+# --------------------------------------------------------------------------
+
+
+def pallas_tpu_compiler_params(*, dimension_semantics=None):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old),
+    built lazily so importing this module never pulls in Pallas."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)

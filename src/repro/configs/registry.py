@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import importlib
 
-from .base import ModelConfig, SHAPES, ShapeConfig, shape_applicable
+from .base import ModelConfig, SHAPES, shape_applicable
 
 ARCHS: dict[str, str] = {
     "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",

@@ -16,6 +16,14 @@ the steady-state HLO.
 
 All four recipes are selectable for baseline comparisons: ``bf16``,
 ``per_tensor`` (TE-style), ``per_group`` (COAT-style), ``moss``.
+
+Every quantized GEMM here (forward, dx, dW) goes through the unified
+kernel dispatch (``repro.kernels.dispatch``): Pallas-native on TPU,
+interpret-mode Pallas under ``REPRO_KERNELS=interpret``, pure-jnp
+reference on CPU.  The MOSS forward and dx use the *fused*
+quantize+GEMM kernel; dW uses the fused requant-along-tokens kernel
+whose level-1 scale is pinned to the forward's s_x (it cancels inside
+the kernel — kernels/mx_bwd.py).
 """
 
 from __future__ import annotations
@@ -28,13 +36,7 @@ import jax.numpy as jnp
 
 from .formats import QuantConfig
 from .quant import (
-    MxQ,
-    PerGroupQ,
     PerTensorQ,
-    group_gemm,
-    mx_gemm,
-    pt_gemm,
-    quant_mx,
     quant_per_group,
     quant_per_tensor,
 )
@@ -87,22 +89,29 @@ def _quantize_w(cfg: QuantConfig, w: jax.Array, w_scale: jax.Array):
 
 
 def _fwd_gemm(cfg: QuantConfig, x2d: jax.Array, wq: PerTensorQ):
-    k = x2d.shape[-1]
+    """Forward GEMM via the unified kernel dispatch (repro.kernels.
+    dispatch): Pallas-native on TPU, interpret-mode Pallas under
+    REPRO_KERNELS=interpret, jnp reference on CPU."""
+    from repro.kernels import dispatch
+
     if cfg.mode == "moss":
-        xq = quant_mx(_pad_axis(x2d, -1, cfg.micro_group), cfg.micro_group,
-                      cfg.fwd_format)
+        # fused quantize+GEMM: one pass over x, residual (q, sexp)
+        # emitted by the same kernel (paper Fig. 3b steady state)
         wq_p = PerTensorQ(q=_pad_axis(wq.q, 0, cfg.micro_group), s=wq.s)
-        y = mx_gemm(xq, wq_p, out_dtype=jnp.float32)
+        y, xq = dispatch.fused_quant_matmul(
+            _pad_axis(x2d, -1, cfg.micro_group), wq_p,
+            fmt=cfg.fwd_format, micro_group=cfg.micro_group,
+            out_dtype=jnp.float32)
         return y, xq
     if cfg.mode == "per_group":
         xq = quant_per_group(_pad_axis(x2d, -1, cfg.group_size),
                              cfg.group_size, cfg.fwd_format)
         wq_p = PerTensorQ(q=_pad_axis(wq.q, 0, cfg.group_size), s=wq.s)
-        y = group_gemm(xq, wq_p, out_dtype=jnp.float32)
+        y = dispatch.group_matmul(xq, wq_p, out_dtype=jnp.float32)
         return y, xq
     # per_tensor
     xq = quant_per_tensor(x2d, cfg.fwd_format)
-    return pt_gemm(xq, wq, out_dtype=jnp.float32), xq
+    return dispatch.pt_matmul(xq, wq, out_dtype=jnp.float32), xq
 
 
 def _qmm_fwd(cfg: QuantConfig, x, w, w_scale):
@@ -128,26 +137,6 @@ def _qmm_fwd(cfg: QuantConfig, x, w, w_scale):
     return y, (xq, wq, jnp.zeros((0,), w.dtype))
 
 
-def _bwd_quant_lhs(cfg: QuantConfig, a2d: jax.Array, fmt: str):
-    """Quantize a backward GEMM's LHS grouped along its (last) inner dim."""
-    if cfg.mode == "moss":
-        return quant_mx(_pad_axis(a2d, -1, cfg.micro_group),
-                        cfg.micro_group, fmt), "moss"
-    if cfg.mode == "per_group":
-        return quant_per_group(_pad_axis(a2d, -1, cfg.group_size),
-                               cfg.group_size, fmt), "per_group"
-    return quant_per_tensor(a2d, fmt), "per_tensor"
-
-
-def _bwd_gemm(kind: str, lhs, rhs: PerTensorQ, out_dtype):
-    """Dispatch a backward GEMM; the caller pads rhs's inner dim."""
-    if kind == "moss":
-        return mx_gemm(lhs, rhs, out_dtype=out_dtype)
-    if kind == "per_group":
-        return group_gemm(lhs, rhs, out_dtype=out_dtype)
-    return pt_gemm(lhs, rhs, out_dtype=out_dtype)
-
-
 def _qmm_bwd(cfg: QuantConfig, res, g):
     if cfg.mode == "bf16":
         from .runtime_flags import mm
@@ -160,6 +149,8 @@ def _qmm_bwd(cfg: QuantConfig, res, g):
         return (dx.reshape(*lead, k).astype(x_wit.dtype),
                 dw.astype(w_wit.dtype), jnp.zeros((), jnp.float32))
 
+    from repro.kernels import dispatch
+
     xq, wq, w_witness = res
     lead = g.shape[:-1]
     k = wq.q.shape[0]
@@ -169,28 +160,46 @@ def _qmm_bwd(cfg: QuantConfig, res, g):
     g2d = g.reshape(-1, n).astype(jnp.float32)
     bfmt = cfg.bwd_format
 
-    # ---- dx = g @ Wᵀ : inner dim N; g grouped along N (E5M2), Wᵀ per-tensor
-    gq, kind = _bwd_quant_lhs(cfg, g2d, bfmt)
-    group = cfg.micro_group if cfg.mode == "moss" else cfg.group_size
-    if cfg.mode == "per_tensor":
-        wqT = PerTensorQ(q=wq.q.T, s=wq.s)
+    # ---- dx = g @ Wᵀ : inner dim N; g grouped along N (E5M2), Wᵀ
+    # per-tensor.  MOSS path: fused quantize+GEMM kernel, same operator
+    # as the forward.
+    if cfg.mode == "moss":
+        wqT = PerTensorQ(q=_pad_axis(wq.q.T, 0, cfg.micro_group), s=wq.s)
+        dx2d, _ = dispatch.fused_quant_matmul(
+            _pad_axis(g2d, -1, cfg.micro_group), wqT, fmt=bfmt,
+            micro_group=cfg.micro_group, out_dtype=jnp.float32)
+    elif cfg.mode == "per_group":
+        gq = quant_per_group(_pad_axis(g2d, -1, cfg.group_size),
+                             cfg.group_size, bfmt)
+        wqT = PerTensorQ(q=_pad_axis(wq.q.T, 0, cfg.group_size), s=wq.s)
+        dx2d = dispatch.group_matmul(gq, wqT, out_dtype=jnp.float32)
     else:
-        # pad Wᵀ's inner (N) axis to match the padded/grouped g
-        wqT = PerTensorQ(q=_pad_axis(wq.q.T, 0, group), s=wq.s)
-    dx2d = _bwd_gemm(kind, gq, wqT, jnp.float32)
-    dx2d = dx2d[:, :k]
-    dx = dx2d.reshape(*lead, k).astype(x_dtype)
+        gq = quant_per_tensor(g2d, bfmt)
+        dx2d = dispatch.pt_matmul(gq, PerTensorQ(q=wq.q.T, s=wq.s),
+                                  out_dtype=jnp.float32)
+    dx = dx2d[:, :k].reshape(*lead, k).astype(x_dtype)
 
-    # ---- dW = xᵀ @ g : inner dim M (tokens); dequantize the saved fp8
-    # activation and re-quantize grouped along M (documented extra
-    # quantization — same trade as COAT's transposed copy).  bf16 dequant
-    # halves the transient buffer; error ≪ the fp8 noise floor.
-    x2d = xq.dequant(jnp.bfloat16)[:, :k]         # (M, K) from fp8 residual
-    m = x2d.shape[0]
-    xTq, kind = _bwd_quant_lhs(cfg, x2d.T, cfg.fwd_format)   # (K, M) grp M
-    g_pt = quant_per_tensor(_pad_axis(g2d, 0, group)
-                            if cfg.mode != "per_tensor" else g2d, bfmt)
-    dw = _bwd_gemm(kind, xTq, g_pt, jnp.float32)
+    # ---- dW = xᵀ @ g : inner dim M (tokens); re-quantize the saved fp8
+    # activation grouped along M (documented extra quantization — same
+    # trade as COAT's transposed copy).  MOSS path: the dW kernel fuses
+    # dequant → transpose → requant_M → GEMM, pinning the requant's
+    # level-1 scale to s_x so no second amax reduction appears
+    # (kernels/mx_bwd.py).
+    if cfg.mode == "moss":
+        g_pt = quant_per_tensor(g2d, bfmt)
+        dw = dispatch.mx_matmul_dw(xq, g_pt, fmt=cfg.fwd_format,
+                                   out_dtype=jnp.float32)[:k]
+    elif cfg.mode == "per_group":
+        x2d = xq.dequant(jnp.bfloat16)[:, :k]     # (M, K) from fp8 residual
+        xTq = quant_per_group(_pad_axis(x2d.T, -1, cfg.group_size),
+                              cfg.group_size, cfg.fwd_format)
+        g_pt = quant_per_tensor(_pad_axis(g2d, 0, cfg.group_size), bfmt)
+        dw = dispatch.group_matmul(xTq, g_pt, out_dtype=jnp.float32)
+    else:
+        x2d = xq.dequant(jnp.bfloat16)
+        xTq = quant_per_tensor(x2d.T, cfg.fwd_format)
+        g_pt = quant_per_tensor(g2d, bfmt)
+        dw = dispatch.pt_matmul(xTq, g_pt, out_dtype=jnp.float32)
     dw = dw.astype(w_dtype)
 
     return dx, dw, jnp.zeros((), jnp.float32)

@@ -17,10 +17,31 @@ lowering so the compiled HLO reflects TPU operand widths.
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 _FORCE_BF16 = False
+
+# Kernel-dispatch backends (see repro.kernels.dispatch):
+#   "pallas"    — Pallas-native kernels (TPU)
+#   "interpret" — the same Pallas kernels under the interpreter (CPU;
+#                 slow — parity tests and kernel-path debugging)
+#   "ref"       — the pure-jnp semantic reference in repro.core.quant
+KERNEL_BACKENDS = ("pallas", "interpret", "ref")
+
+
+def kernel_backend() -> str:
+    """Active kernel backend: ``REPRO_KERNELS`` env override, else
+    Pallas-native on TPU and the jnp reference elsewhere."""
+    env = os.environ.get("REPRO_KERNELS", "").strip()
+    if env:
+        if env not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"REPRO_KERNELS={env!r}: expected one of {KERNEL_BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def force_bf16_operands(value: bool = True) -> None:

@@ -17,11 +17,12 @@ inference/scale-out experiments and compiles in the multi-pod dry-run
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.compat.jaxapi import shard_map
 
 
 def pipeline_forward(mesh, stage_fn, params_stacked, x_micro,
@@ -74,7 +75,7 @@ def pipeline_forward(mesh, stage_fn, params_stacked, x_micro,
         return jax.lax.psum(outs, "pod")
 
     spec_p = jax.tree.map(lambda _: P("pod"), params_stacked)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(spec_p, P()), out_specs=P(),
         check_vma=False,

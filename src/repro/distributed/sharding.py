@@ -14,6 +14,8 @@ import threading
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat.jaxapi import abstract_mesh
+
 # logical name -> tuple of candidate mesh axes (joined as a tuple spec
 # entry).  "batch" spans pod+data so the pod axis is pure DP.
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
@@ -73,10 +75,7 @@ def _active_mesh() -> Mesh | None:
     mesh = getattr(_state, "mesh", None)
     if mesh is not None:
         return mesh
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty:
-        return am
-    return None
+    return abstract_mesh()
 
 
 def resolve_spec(logical: tuple[str | None, ...],

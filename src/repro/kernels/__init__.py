@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the MOSS hot path + the unified dispatch layer.
+#
+#   dispatch.py    backend selection (pallas / interpret / ref) — the
+#                  single entry point for every quantized GEMM; the
+#                  custom-VJP in repro.core.linear routes through it
+#   mx_fused.py    fused two-level quantize + GEMM (fwd and bwd-dx)
+#   mx_gemm.py     microscaled GEMM on pre-quantized operands
+#   mx_bwd.py      dW GEMM: fused dequant → transpose → requant along M
+#   mx_quant.py    standalone fused two-level quantizer
+#   group_gemm.py  COAT per-group baseline (in-loop dequant)
+#   ref.py         pure-jnp oracles (semantics live in repro.core.quant)
+#   ops.py         thin public wrappers over dispatch

@@ -1,0 +1,215 @@
+"""Unified kernel dispatch — the single entry point for every quantized
+GEMM and fused quantizer in the training path.
+
+``repro.core.linear``'s custom-VJP (forward, dx and dW GEMMs) and the
+public ``ops`` wrappers all route through this module; nothing above
+this layer touches a Pallas kernel or the jnp reference directly.  Per
+call the backend is chosen by ``repro.core.runtime_flags.kernel_backend``:
+
+  pallas      Pallas-native TPU kernels (mx_fused / mx_gemm / mx_bwd /
+              group_gemm / mx_quant)
+  interpret   the same kernels under the Pallas interpreter — CPU
+              parity testing of the *kernel* path (REPRO_KERNELS=interpret)
+  ref         the pure-jnp semantic reference in repro.core.quant —
+              the CPU execution default (XLA fuses it)
+
+The kernel paths impose TPU-friendly alignment (M/N blocks of 128, K
+micro-group multiples); this module zero-pads operands up to block
+multiples and slices results back, so callers see one shape contract
+across backends.  Zero padding is exact under every quantizer here
+(amax of an all-zero group clamps to TINY → q = 0 → contributes 0).
+
+Kernels hardcode the paper's micro-group of 32 and COAT group of 128;
+non-default geometries silently take the reference path (they exist
+only for ablations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.quant import MxQ, PerGroupQ, PerTensorQ
+from repro.core.runtime_flags import KERNEL_BACKENDS, kernel_backend
+from . import ref
+from .group_gemm import GROUP, group_gemm_pallas
+from .mx_bwd import mx_dw_gemm_pallas
+from .mx_fused import fused_quant_gemm_pallas
+from .mx_gemm import mx_gemm_pallas
+from .mx_quant import mx_quant_pallas
+
+MICRO = 32
+
+
+def _resolve(backend: str | None) -> str:
+    if backend is None:
+        return kernel_backend()
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"backend={backend!r}: expected one of {KERNEL_BACKENDS}")
+    return backend
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return v + (-v) % mult
+
+
+def _pad_to(x: jax.Array, axis: int, target: int) -> jax.Array:
+    if x.shape[axis] == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, widths)
+
+
+def _k_block(kp: int) -> int:
+    for b in (512, 256, 128, 64, 32):
+        if kp % b == 0:
+            return b
+    raise AssertionError(f"K={kp} not a multiple of {MICRO}")
+
+
+def _m_block(mp: int) -> int:
+    for b in (256, 128, 64, 32, 16, 8):
+        if mp % b == 0:
+            return b
+    raise AssertionError(f"M={mp} not a multiple of 8")
+
+
+# ---------------------------------------------------------------------------
+# MOSS (two-level microscaling) path
+# ---------------------------------------------------------------------------
+
+
+def mx_quantize(x2d: jax.Array, fmt: str = "e4m3",
+                micro_group: int = MICRO,
+                backend: str | None = None) -> MxQ:
+    """Two-level microscaling quantize of a (M, K) tensor (K % micro)."""
+    backend = _resolve(backend)
+    assert x2d.shape[-1] % micro_group == 0, \
+        f"K={x2d.shape[-1]} not divisible by micro_group={micro_group}"
+    if backend == "ref" or micro_group != MICRO:
+        return Q.quant_mx(x2d, micro_group, fmt)
+    m, k = x2d.shape
+    s = ref.global_scale_ref(x2d, fmt)
+    mp = _ceil_to(m, 8)
+    q, e = mx_quant_pallas(_pad_to(x2d, 0, mp), s, fmt=fmt,
+                           bm=_m_block(mp), bk=_k_block(k),
+                           interpret=backend == "interpret")
+    return MxQ(q=q[:m], sexp=e[:m], s=s)
+
+
+def mx_matmul(xq: MxQ, wq: PerTensorQ, out_dtype=jnp.bfloat16,
+              backend: str | None = None) -> jax.Array:
+    """MOSS GEMM (paper Fig. 3b): (Qx·2^sexp) @ Qw · s_x·s_w — the
+    level-2 rescale rides the operand, one f32 epilogue multiply."""
+    backend = _resolve(backend)
+    micro = xq.q.shape[-1] // xq.sexp.shape[-1]
+    if backend == "ref" or micro != MICRO or xq.q.ndim != 2:
+        return Q.mx_gemm(xq, wq, out_dtype=out_dtype)
+    m, k = xq.q.shape
+    n = wq.q.shape[-1]
+    mp, np_, kp = _ceil_to(m, 128), _ceil_to(n, 128), _ceil_to(k, MICRO)
+    acc = mx_gemm_pallas(
+        _pad_to(_pad_to(xq.q, 0, mp), 1, kp),
+        _pad_to(_pad_to(xq.sexp, 0, mp), 1, kp // MICRO),
+        _pad_to(_pad_to(wq.q, 0, kp), 1, np_),
+        bm=128, bn=128, bk=_k_block(kp),
+        interpret=backend == "interpret")
+    return (acc[:m, :n] * (xq.s * wq.s)).astype(out_dtype)
+
+
+def fused_quant_matmul(x2d: jax.Array, wq: PerTensorQ,
+                       fmt: str = "e4m3", micro_group: int = MICRO,
+                       out_dtype=jnp.bfloat16,
+                       backend: str | None = None
+                       ) -> tuple[jax.Array, MxQ]:
+    """Fused quantize + MOSS GEMM: x (M, K) bf16/f32 in, finished GEMM
+    plus the FP8 residual (for the custom-VJP) out — one pass over x,
+    matching the paper's Fig. 3b steady-state HLO.  Serves the forward
+    (x @ W) and the dx backward (g @ Wᵀ, E5M2)."""
+    backend = _resolve(backend)
+    # uniform shape contract across backends: the residual's micro-group
+    # boundaries must tile K exactly (callers pad — see linear._pad_axis)
+    assert x2d.shape[-1] % micro_group == 0, \
+        f"K={x2d.shape[-1]} not divisible by micro_group={micro_group}"
+    if backend == "ref" or micro_group != MICRO:
+        xq = Q.quant_mx(x2d, micro_group, fmt)
+        return Q.mx_gemm(xq, wq, out_dtype=out_dtype), xq
+    m, k = x2d.shape
+    n = wq.q.shape[-1]
+    s = ref.global_scale_ref(x2d, fmt)
+    mp, np_, kp = _ceil_to(m, 128), _ceil_to(n, 128), _ceil_to(k, MICRO)
+    acc, q, sexp = fused_quant_gemm_pallas(
+        _pad_to(_pad_to(x2d, 0, mp), 1, kp), s,
+        _pad_to(_pad_to(wq.q, 0, kp), 1, np_),
+        fmt=fmt, bm=128, bn=128, bk=_k_block(kp),
+        interpret=backend == "interpret")
+    y = (acc[:m, :n] * (s * wq.s)).astype(out_dtype)
+    return y, MxQ(q=q[:m, :k], sexp=sexp[:m, :k // MICRO], s=s)
+
+
+def mx_matmul_dw(xq: MxQ, gq: PerTensorQ, fmt: str = "e4m3",
+                 out_dtype=jnp.float32,
+                 backend: str | None = None) -> jax.Array:
+    """The dW backward GEMM: requant_M(x̂)ᵀ @ Qg · s_x·s_g, where x̂ is
+    the FP8 forward residual and the re-quantization (micro-groups along
+    the token dim, level-1 scale pinned to s_x so it cancels — see
+    kernels/mx_bwd.py) is fused into the kernel."""
+    backend = _resolve(backend)
+    micro = xq.q.shape[-1] // xq.sexp.shape[-1]
+    m, k = xq.q.shape
+    n = gq.q.shape[-1]
+    if backend == "ref" or micro != MICRO:
+        mp = _ceil_to(m, micro)
+        x_unit = MxQ(_pad_to(xq.q, 0, mp), _pad_to(xq.sexp, 0, mp),
+                     jnp.float32(1.0)).dequant(jnp.float32)  # Qx·2^sexp
+        xt = Q.quant_mx(x_unit.T, micro, fmt,
+                        global_scale=jnp.float32(1.0))
+        acc = Q.mx_gemm(xt, PerTensorQ(q=_pad_to(gq.q, 0, mp),
+                                       s=jnp.float32(1.0)),
+                        out_dtype=jnp.float32)
+    else:
+        mp, np_, kp = _ceil_to(m, 128), _ceil_to(n, 128), _ceil_to(k, MICRO)
+        acc = mx_dw_gemm_pallas(
+            _pad_to(_pad_to(xq.q, 0, mp), 1, kp),
+            _pad_to(_pad_to(xq.sexp, 0, mp), 1, kp // MICRO),
+            _pad_to(_pad_to(gq.q, 0, mp), 1, np_),
+            fmt=fmt, bm=128, bn=128, bko=_k_block(kp),
+            interpret=backend == "interpret")[:k, :n]
+    return (acc * (xq.s * gq.s)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# COAT (per-group) and TE (per-tensor) baselines
+# ---------------------------------------------------------------------------
+
+
+def group_matmul(xq: PerGroupQ, wq: PerTensorQ, out_dtype=jnp.bfloat16,
+                 backend: str | None = None) -> jax.Array:
+    """COAT-style GEMM (paper Fig. 3a): per-group f32 rescale of every
+    partial sum inside the K loop — the overhead MOSS removes."""
+    backend = _resolve(backend)
+    group = xq.q.shape[-1] // xq.s.shape[-1]
+    if backend == "ref" or group != GROUP or xq.q.ndim != 2:
+        return Q.group_gemm(xq, wq, out_dtype=out_dtype)
+    m, k = xq.q.shape
+    n = wq.q.shape[-1]
+    mp, np_ = _ceil_to(m, 128), _ceil_to(n, 128)
+    acc = group_gemm_pallas(
+        _pad_to(xq.q, 0, mp),
+        _pad_to(xq.s, 0, mp),
+        _pad_to(wq.q, 1, np_),
+        bm=128, bn=128, bk=GROUP,
+        interpret=backend == "interpret")
+    return (acc[:m, :n] * wq.s).astype(out_dtype)
+
+
+def pt_matmul(xq: PerTensorQ, wq: PerTensorQ, out_dtype=jnp.bfloat16,
+              backend: str | None = None) -> jax.Array:
+    """TE-style per-tensor GEMM.  Epilogue-only dequant: this is a plain
+    FP8 matmul XLA already maps to the MXU, so every backend takes the
+    reference path (there is nothing for a hand-written kernel to fuse)."""
+    del backend
+    return Q.pt_gemm(xq, wq, out_dtype=out_dtype)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: the dW backward GEMM of the MOSS custom-VJP.
+
+  dW[k, n] = Σ_m requant_M(x̂)[k, m] · Qg[m, n]
+
+where x̂ is the FP8 forward residual dequantized (x̂ = Qx · 2^sexp · s_x)
+and ``requant_M`` re-quantizes the *transposed* activation with 32-wide
+micro-groups along the token (M) dimension — the inner dimension of the
+dW GEMM — so the level-2 scales again ride the operand and the single
+f32 dequant stays in the epilogue (paper Fig. 3b applied to backward).
+
+Key identity making the fusion cheap: re-quantizing against the SAME
+level-1 scale s_x the forward used makes s_x cancel out of the in-kernel
+arithmetic —
+
+  x̂/s_x = Qx·2^sexp,    e' = ceil(log2(amax_M(x̂/s_x)/FP8_MAX)),
+  q' = cast_fp8((x̂/s_x)/2^e'),
+
+so the kernel needs only the fp8 residual + its exponents, never a f32
+activation and never a second global amax reduction.  (This pins the dW
+requant's level-1 scale to s_x; since every |x̂| ≤ FP8_MAX·s_x the ratio
+is ≤ 1 and the E8M0 ceil guarantee still holds — same trade COAT makes
+with its transposed quantized copy, minus the extra memory pass.)
+
+Grid (K/bko, N/bn, M/bm), M (the contraction) innermost "arbitrary";
+per M-block the kernel dequants Qx·2^sexp, transposes in-VMEM, requants
+along M, rescales the operand by 2^e', and accumulates the MXU dot with
+the E5M2 gradient tile.  Epilogue (× s_x·s_g) happens in the dispatch
+layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.jaxapi import pallas_tpu_compiler_params
+from repro.core.formats import E4M3_MAX, E5M2_MAX
+
+MICRO = 32
+
+
+def _mx_dw_gemm_kernel(qx_ref, se_ref, qg_ref, o_ref, acc_ref, *,
+                       n_m: int, fp8_max: float, q_dtype):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = qx_ref[...].astype(jnp.float32)                   # (bm, bko)
+    bm, bko = x.shape
+    # dequant by the forward's level-2 exponents (units of s_x)
+    ss_fwd = jnp.exp2(se_ref[...].astype(jnp.float32))    # (bm, bko/32)
+    xd = (x.reshape(bm, bko // MICRO, MICRO) * ss_fwd[..., None]
+          ).reshape(bm, bko)
+    xt = xd.T                                             # (bko, bm)
+    # requant along M: micro-groups of 32 tokens, level-1 scale = s_x
+    # (which cancels — see module docstring)
+    xg = xt.reshape(bko, bm // MICRO, MICRO)
+    amax = jnp.max(jnp.abs(xg), axis=-1)                  # (bko, bm/32)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax / fp8_max,
+                                      2.0 ** -149)) - 1e-6)
+    e = jnp.clip(e, -127, 127)
+    ss = jnp.exp2(e)
+    safe = jnp.where(ss > 0, ss, 1.0)[..., None]
+    q = jnp.where(ss[..., None] > 0, xg / safe, 0.0)
+    q = jnp.clip(q, -fp8_max, fp8_max).astype(q_dtype)    # fp8 requant
+    # operand: requantized values × 2^e (exact po2 rescale in bf16)
+    xop = (q.astype(jnp.bfloat16) * ss.astype(jnp.bfloat16)[..., None]
+           ).reshape(bko, bm)
+    g = qg_ref[...].astype(jnp.bfloat16)                  # (bm, bn)
+    acc_ref[...] += jnp.dot(xop, g, preferred_element_type=jnp.float32)
+
+    @pl.when(mi == n_m - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "bm", "bn", "bko", "interpret"))
+def mx_dw_gemm_pallas(qx, sexp, qg, *, fmt: str = "e4m3", bm: int = 128,
+                      bn: int = 128, bko: int = 256,
+                      interpret: bool = False):
+    """qx: (M, K) fp8 forward residual; sexp: (M, K//32) int8; qg: (M, N)
+    fp8 gradient (per-tensor scaled).  Returns the UNSCALED f32 dW
+    accumulation (K, N); the caller applies s_x·s_g in the epilogue."""
+    m, k = qx.shape
+    n = qg.shape[1]
+    assert qg.shape[0] == m and sexp.shape == (m, k // MICRO)
+    assert m % MICRO == 0, f"M={m} must be a multiple of {MICRO}"
+    bm, bn, bko = min(bm, m), min(bn, n), min(bko, k)
+    assert m % bm == 0 and n % bn == 0 and k % bko == 0, \
+        f"(M,N,K)=({m},{n},{k}) not divisible by blocks ({bm},{bn},{bko})"
+    assert bm % MICRO == 0 and bko % MICRO == 0
+    fp8max = E4M3_MAX if fmt == "e4m3" else E5M2_MAX
+    q_dtype = jnp.float8_e4m3fn if fmt == "e4m3" else jnp.float8_e5m2
+    n_m = m // bm
+    grid = (k // bko, n // bn, n_m)
+    return pl.pallas_call(
+        functools.partial(_mx_dw_gemm_kernel, n_m=n_m, fp8_max=fp8max,
+                          q_dtype=q_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bko), lambda ki, ni, mi: (mi, ki)),
+            pl.BlockSpec((bm, bko // MICRO), lambda ki, ni, mi: (mi, ki)),
+            pl.BlockSpec((bm, bn), lambda ki, ni, mi: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((bko, bn), lambda ki, ni, mi: (ki, ni)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bko, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(qx, sexp, qg)

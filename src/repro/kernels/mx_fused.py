@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused two-level quantize + microscaled FP8 GEMM.
+
+This is the steady-state operator of the MOSS training path (paper
+Fig. 3b): the activation (forward) or gradient (backward-dx) enters in
+bf16/f32 and leaves as a finished GEMM accumulation — the quantizer
+never round-trips through HBM.  Per (bm, bk) LHS tile the kernel
+
+  1. groups 32-wide micro-groups, takes amaxes,
+  2. derives the E8M0 level-2 exponents against the (precomputed)
+     level-1 global scale,
+  3. performs the saturating FP8 cast,
+  4. applies the exponent-only operand rescale (exact in bf16), and
+  5. runs the MXU dot against the FP8 RHS tile,
+
+emitting the f32 accumulation *and* the quantized payload (q, sexp) so
+the custom-VJP can keep the FP8 residual for the backward pass without
+a second quantization pass.  The single f32 epilogue multiply
+(s_x · s_w) happens outside in the dispatch layer.
+
+Grid (M/bm, N/bn, K/bk), K innermost ("arbitrary"); q/sexp blocks are
+indexed (i, kk) only, so each is (re)written identically once per
+N-block — dead writes the Mosaic pipeliner keeps in VMEM.
+
+VMEM working set at the default (128, 128, 512) blocks:
+  bm·bk·4 (x) + bk·bn (qw) + bm·bn·4 (acc) + bm·bk (q) + bm·bk/32 (se)
+≈ 0.45 MiB ≪ 16 MiB, leaving headroom for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.jaxapi import pallas_tpu_compiler_params
+from repro.core.formats import E4M3_MAX, E5M2_MAX
+
+MICRO = 32
+_TINY = 1e-30
+
+
+def _fused_quant_gemm_kernel(x_ref, s_ref, qw_ref, o_ref, q_ref, se_ref,
+                             acc_ref, *, n_k: int, fp8_max: float,
+                             q_dtype):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    bm, bk = x.shape
+    s = jnp.maximum(s_ref[0, 0], _TINY)
+    xg = x.reshape(bm, bk // MICRO, MICRO)
+    amax = jnp.max(jnp.abs(xg), axis=-1)                  # (bm, bk/32)
+    # E8M0 encode (identical guards to formats.e8m0_encode / mx_quant.py)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax / fp8_max / s,
+                                      2.0 ** -149)) - 1e-6)
+    e = jnp.clip(e, -127, 127)
+    se_ref[...] = e.astype(jnp.int8)
+    denom = jnp.exp2(e) * s
+    safe = jnp.where(denom > 0, denom, 1.0)[..., None]
+    q = jnp.where(denom[..., None] > 0, xg / safe, 0.0)
+    q = jnp.clip(q, -fp8_max, fp8_max).astype(q_dtype)    # saturating cast
+    q_ref[...] = q.reshape(bm, bk)
+    # operand path: quantized values × 2^e (exponent-only; exact in bf16)
+    ss = jnp.exp2(e).astype(jnp.bfloat16)
+    xop = (q.astype(jnp.bfloat16) * ss[..., None]).reshape(bm, bk)
+    w = qw_ref[...].astype(jnp.bfloat16)                  # (bk, bn)
+    acc_ref[...] += jnp.dot(xop, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "bm", "bn", "bk", "interpret"))
+def fused_quant_gemm_pallas(x, s_global, qw, *, fmt: str = "e4m3",
+                            bm: int = 128, bn: int = 128, bk: int = 512,
+                            interpret: bool = False):
+    """x: (M, K) f32/bf16; s_global: () f32 level-1 scale; qw: (K, N) fp8.
+    Returns (acc f32 (M, N) UNSCALED, q fp8 (M, K), sexp int8 (M, K//32));
+    the caller applies the s_x·s_w epilogue and owns the residual."""
+    m, k = x.shape
+    n = qw.shape[1]
+    assert k == qw.shape[0] and k % MICRO == 0
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"(M,N,K)=({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    assert bk % MICRO == 0
+    fp8max = E4M3_MAX if fmt == "e4m3" else E5M2_MAX
+    q_dtype = jnp.float8_e4m3fn if fmt == "e4m3" else jnp.float8_e5m2
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    acc, q, sexp = pl.pallas_call(
+        functools.partial(_fused_quant_gemm_kernel, n_k=n_k,
+                          fp8_max=fp8max, q_dtype=q_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk // MICRO), lambda i, j, kk: (i, kk)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), q_dtype),
+            jax.ShapeDtypeStruct((m, k // MICRO), jnp.int8),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, s_global.reshape(1, 1), qw)
+    return acc, q, sexp

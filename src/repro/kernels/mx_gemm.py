@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat.jaxapi import pallas_tpu_compiler_params
+
 MICRO = 32
 
 
@@ -81,6 +83,6 @@ def mx_gemm_pallas(qx, sexp, qw, *, bm: int = 128, bn: int = 128,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qx, sexp, qw)

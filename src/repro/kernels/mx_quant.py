@@ -20,8 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat.jaxapi import pallas_tpu_compiler_params
 from repro.core.formats import E4M3_MAX, E5M2_MAX
 
 MICRO = 32
@@ -76,6 +76,6 @@ def mx_quant_pallas(x, s_global, *, fmt: str = "e4m3", bm: int = 256,
             jax.ShapeDtypeStruct((m, k // MICRO), jnp.int8),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(x, s_global.reshape(1, 1))

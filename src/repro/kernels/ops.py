@@ -1,80 +1,54 @@
-"""Jit'd public wrappers with backend dispatch.
+"""Public convenience wrappers over the unified kernel dispatch.
 
-On TPU the Pallas kernels run natively; on CPU (this container) the
-pure-jnp reference path executes (same semantics — the kernels are
-validated against it in interpret mode by tests/test_kernels.py).
-Set ``REPRO_KERNELS=interpret`` to force interpret-mode Pallas on CPU
-(slow; used by the benchmark harness for kernel-path timing).
+Kept for benchmarks/examples and backward compatibility; the training
+path (``repro.core.linear``) calls ``repro.kernels.dispatch`` directly.
+Backend selection (pallas / interpret / ref) happens per call inside
+dispatch, so flipping ``REPRO_KERNELS`` between calls takes effect
+immediately — the Pallas kernels themselves are jitted with the
+interpret flag static, which keeps jit caches per-backend.
 """
 
 from __future__ import annotations
 
-import functools
-import os
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.formats import fp8_max
-from . import ref
-from .group_gemm import group_gemm_pallas
-from .mx_gemm import mx_gemm_pallas
-from .mx_quant import mx_quant_pallas
+from repro.core.quant import MxQ, PerGroupQ, PerTensorQ
+from . import dispatch
 
 
-def _mode() -> str:
-    env = os.environ.get("REPRO_KERNELS")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
-
-
-@functools.partial(jax.jit, static_argnames=("fmt",))
 def mx_quantize(x, fmt: str = "e4m3"):
     """Two-level microscaling quantize: returns (q, sexp, s_global)."""
-    s = ref.global_scale_ref(x, fmt)
-    mode = _mode()
-    if mode == "pallas":
-        q, e = mx_quant_pallas(x, s, fmt=fmt)
-    elif mode == "interpret":
-        q, e = mx_quant_pallas(x, s, fmt=fmt, interpret=True)
-    else:
-        q, e = ref.mx_quant_ref(x, s, fmt)
-    return q, e, s
+    q = dispatch.mx_quantize(x, fmt=fmt)
+    return q.q, q.sexp, q.s
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype",))
 def mx_matmul(qx, sexp, qw, s_x, s_w, out_dtype=jnp.bfloat16):
     """Full MOSS GEMM: kernel main loop + f32 epilogue (s_x·s_w)."""
-    mode = _mode()
-    if mode == "pallas":
-        acc = mx_gemm_pallas(qx, sexp, qw)
-    elif mode == "interpret":
-        acc = mx_gemm_pallas(qx, sexp, qw, interpret=True)
-    else:
-        acc = ref.mx_gemm_ref(qx, sexp, qw)
-    return (acc * (s_x * s_w)).astype(out_dtype)
+    return dispatch.mx_matmul(MxQ(q=qx, sexp=sexp, s=s_x),
+                              PerTensorQ(q=qw, s=s_w),
+                              out_dtype=out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("out_dtype",))
 def coat_matmul(qx, sx, qw, s_w, out_dtype=jnp.bfloat16):
     """COAT-baseline per-group GEMM (in-loop dequant) + weight epilogue."""
-    mode = _mode()
-    if mode == "pallas":
-        acc = group_gemm_pallas(qx, sx, qw)
-    elif mode == "interpret":
-        acc = group_gemm_pallas(qx, sx, qw, interpret=True)
-    else:
-        acc = ref.group_gemm_ref(qx, sx, qw)
-    return (acc * s_w).astype(out_dtype)
+    return dispatch.group_matmul(PerGroupQ(q=qx, s=sx),
+                                 PerTensorQ(q=qw, s=s_w),
+                                 out_dtype=out_dtype)
 
 
 def moss_linear(x, w, out_dtype=jnp.bfloat16):
-    """End-to-end MOSS linear via the kernel path: quantize activation
-    (two-level), weight (per-tensor), GEMM, epilogue."""
+    """End-to-end MOSS linear via the kernel path: fused two-level
+    quantize + GEMM on the activation, per-tensor weight, f32 epilogue.
+    K is zero-padded to a micro-group multiple (exact — zero groups
+    quantize to zero and contribute nothing)."""
     from repro.core.quant import quant_per_tensor
 
-    qx, sexp, s_x = mx_quantize(x.reshape(-1, x.shape[-1]))
+    k = x.shape[-1]
+    pad = (-k) % dispatch.MICRO
+    x2d = x.reshape(-1, k)
+    if pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
     wq = quant_per_tensor(w)
-    y = mx_matmul(qx, sexp, wq.q, s_x, wq.s, out_dtype)
+    y, _ = dispatch.fused_quant_matmul(x2d, wq, out_dtype=out_dtype)
     return y.reshape(*x.shape[:-1], w.shape[-1])

@@ -13,7 +13,9 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat.jaxapi import make_mesh, mesh_from_devices
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -22,8 +24,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return make_mesh(shape, axes)
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
@@ -31,8 +32,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"{n} (see launch/dryrun.py)")
     # more devices than needed (e.g. 512 placeholders, single-pod mesh):
     # take a prefix so both meshes work in one process.
-    dev = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_from_devices(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
@@ -40,5 +40,4 @@ def make_host_mesh(model: int = 1) -> Mesh:
     n = len(jax.devices())
     data = n // model
     dev = np.asarray(jax.devices()[:data * model]).reshape(data, model)
-    return Mesh(dev, ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    return mesh_from_devices(dev, ("data", "model"))

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.models.layers import init_tree, quant_mask_tree
+from repro.models.layers import init_tree
 from repro.models.transformer import model_defs
 from repro.train.steps import make_decode_step, make_prefill_step
 

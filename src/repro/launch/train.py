@@ -19,7 +19,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs.registry import get_config

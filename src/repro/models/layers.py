@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import QuantConfig
-from repro.core.linear import QT, qlinear, dense_general
+from repro.core.linear import QT, qlinear
 from repro.distributed.sharding import resolve_spec, shard
 
 

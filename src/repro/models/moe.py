@@ -26,9 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat.jaxapi import shard_map
 from repro.core.formats import QuantConfig
 from repro.core.linear import QT, qlinear
-from repro.distributed.sharding import shard, _active_mesh
+from repro.distributed.sharding import _active_mesh
 from .layers import PDef
 
 
@@ -168,7 +169,7 @@ def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
         wspec_down = P("model", None,
                        "data" if "data" in mesh.axis_names else None)
         sspec = P("model")
-        y = jax.shard_map(
+        y = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, P(token_axes), tok_spec,
                       QT(wspec_up, sspec), QT(wspec_up, sspec),

@@ -24,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.core.formats import QuantConfig
 from repro.core.linear import QT, qlinear
-from repro.core.runtime_flags import einsum as rf_einsum
 from repro.distributed.sharding import shard
 from .layers import PDef
 

@@ -25,7 +25,6 @@ from . import moe as moe_mod
 from . import rglru as rglru_mod
 from . import rwkv6 as rwkv_mod
 from .layers import (
-    PDef,
     apply_ffn,
     apply_norm,
     embed_defs,

@@ -17,15 +17,12 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.autoscale import ScaleState
 from repro.core.formats import QuantConfig, fp8_max, TINY
 from repro.distributed import compression
-from repro.distributed.sharding import shard
 from repro.models.layers import quant_mask_tree, wrap_qt, wrap_qt_nojit
 from repro.models.transformer import ce_loss, forward, init_caches, model_defs
 from repro.optim.adamw import (
     AdamWConfig,
-    OptState,
     adamw_update,
     clip_by_global_norm,
     init_opt_state,

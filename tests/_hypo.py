@@ -1,0 +1,72 @@
+"""Optional-hypothesis shim for the property tests.
+
+``hypothesis`` is a test *extra* (see pyproject.toml).  When it is
+installed, this module re-exports the real ``given``/``settings``/
+``strategies``.  When it is not, a deterministic fixed-sweep fallback
+runs each property test over a small parameter grid (first / middle /
+last of every strategy, capped product) so tier-1 collects and passes
+everywhere without the dependency.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fixed-sweep fallback
+    HAVE_HYPOTHESIS = False
+
+    _MAX_CASES = 8
+
+    class _Fixed:
+        """A strategy stub carrying a small list of concrete examples."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            picks = [xs[0], xs[len(xs) // 2], xs[-1]]
+            return _Fixed(dict.fromkeys(picks))      # dedup, keep order
+
+        @staticmethod
+        def integers(lo, hi):
+            return _Fixed(dict.fromkeys([lo, (lo + hi) // 2, hi]))
+
+        @staticmethod
+        def floats(lo, hi, **_kw):
+            return _Fixed(dict.fromkeys([lo, (lo + hi) / 2.0, hi]))
+
+    st = _Strategies()
+
+    def settings(*_a, **_kw):                        # noqa: D401
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = list(strategies)
+        grids = [strategies[n].examples for n in names]
+        combos = list(itertools.product(*grids))
+        if len(combos) > _MAX_CASES:                 # deterministic cap
+            step = len(combos) / _MAX_CASES
+            combos = [combos[int(i * step)] for i in range(_MAX_CASES)]
+
+        def deco(fn):
+            def run(*args, **kw):                    # args = (self,) or ()
+                for combo in combos:
+                    fn(*args, **kw, **dict(zip(names, combo)))
+            # NOT functools.wraps: pytest must see run's own (*args)
+            # signature, or it would treat fn's params as fixtures
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            return run
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -9,12 +9,10 @@ from repro.configs.base import SHAPES, shape_applicable
 from repro.configs.registry import ASSIGNED, get_config
 from repro.core.formats import MOSS_CONFIG
 from repro.models.layers import init_tree, quant_mask_tree, wrap_qt_nojit
-from repro.models.transformer import ce_loss, forward, model_defs
+from repro.models.transformer import forward, model_defs
 from repro.train.steps import (
     TrainHParams,
     init_train_state,
-    make_decode_step,
-    make_prefill_step,
     make_train_step,
 )
 
@@ -47,6 +45,7 @@ def test_forward_shapes_and_finite(arch):
         assert float(aux) > 0.0      # load-balance loss active
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_one_train_step(arch):
     cfg = get_config(arch, smoke=True)
@@ -61,6 +60,7 @@ def test_one_train_step(arch):
         assert bool(jnp.isfinite(leaf).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "rwkv6-3b",
                                   "recurrentgemma-2b",
                                   "deepseek-v2-lite-16b"])
@@ -92,6 +92,7 @@ def test_shape_applicability_matrix():
     assert total == 33       # 40 cells - 7 documented skips
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_microbatched_step_matches_full(arch):
     """Gradient accumulation is loss-equivalent to the full batch.

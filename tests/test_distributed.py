@@ -2,13 +2,11 @@
 devices in SUBPROCESSES (the 512-device override belongs only to
 dryrun; tests must not pollute this process's device count)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -173,6 +171,7 @@ def test_dryrun_single_cell_small_mesh():
         jax.devices()   # pin the 8-device platform BEFORE importing
         # dryrun (which sets the 512-device XLA flag for its own use)
         from jax.sharding import Mesh
+        from repro.compat import jaxapi
         from repro.core import runtime_flags
         runtime_flags.force_bf16_operands(True)
         from repro.launch.dryrun import build_cell, parse_collectives, SHAPES
@@ -185,7 +184,7 @@ def test_dryrun_single_cell_small_mesh():
                               ).lower(*args)
             compiled = lowered.compile()
             coll = parse_collectives(compiled.as_text())
-        print("CELL_OK", compiled.cost_analysis().get("flops", 0) > 0,
+        print("CELL_OK", jaxapi.cost_analysis(compiled).get("flops", 0) > 0,
               coll["total_bytes"] > 0)
     """)
     assert "CELL_OK True True" in out

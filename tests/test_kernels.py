@@ -1,11 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
-ref.py oracles, with hypothesis shape/dtype sweeps."""
+ref.py oracles, with hypothesis shape/dtype sweeps (fixed-grid sweep
+when hypothesis is not installed — see tests/_hypo.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.quant import quant_mx, quant_per_group, quant_per_tensor
 from repro.kernels import ops, ref
@@ -95,6 +95,60 @@ class TestGroupGemmKernel:
         np.testing.assert_allclose(
             np.asarray(acc_p), np.asarray(acc_r), rtol=1e-4,
             atol=abs(float(jnp.abs(acc_r).max())) * 1e-5)
+
+
+class TestFusedQuantGemmKernel:
+    """mx_fused: quantize+GEMM in one kernel == quant_mx ∘ mx_gemm_ref."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(m=st.sampled_from([128, 256]), n=st.sampled_from([128, 256]),
+           k=st.sampled_from([512, 1024]),
+           fmt=st.sampled_from(["e4m3", "e5m2"]))
+    def test_matches_quant_then_gemm(self, m, n, k, fmt):
+        from repro.kernels.mx_fused import fused_quant_gemm_pallas
+
+        x = _rand(m * 5 + n + k, (m, k))
+        w = _rand(k + 9, (k, n), scale=0.05)
+        wq = quant_per_tensor(w)
+        s = ref.global_scale_ref(x, fmt)
+        acc, q, e = fused_quant_gemm_pallas(x, s, wq.q, fmt=fmt,
+                                            interpret=True, bk=256)
+        q_r, e_r = ref.mx_quant_ref(x, s, fmt)
+        assert (np.asarray(e) == np.asarray(e_r)).all()
+        np.testing.assert_array_equal(
+            np.asarray(q.astype(jnp.float32)),
+            np.asarray(q_r.astype(jnp.float32)))
+        acc_r = ref.mx_gemm_ref(q_r, e_r, wq.q)
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_r),
+                                   rtol=1e-5,
+                                   atol=float(jnp.abs(acc_r).max()) * 1e-5)
+
+
+class TestDwGemmKernel:
+    """mx_bwd: fused dequant→transpose→requant_M→GEMM against the
+    explicit composition with unit level-1 scale (it cancels)."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(m=st.sampled_from([128, 256]), n=st.sampled_from([128]),
+           k=st.sampled_from([256, 512]))
+    def test_matches_requant_composition(self, m, n, k):
+        from repro.core.quant import MxQ, PerTensorQ, mx_gemm
+        from repro.kernels.mx_bwd import mx_dw_gemm_pallas
+
+        x = _rand(m + 2 * k, (m, k))
+        g = _rand(m + 3 * n, (m, n), scale=0.1)
+        xq = quant_mx(x)
+        gq = quant_per_tensor(g, "e5m2")
+        acc_p = mx_dw_gemm_pallas(xq.q, xq.sexp, gq.q, interpret=True,
+                                  bko=128)
+        x_unit = MxQ(xq.q, xq.sexp, jnp.float32(1.0)).dequant()
+        xt = quant_mx(x_unit.T, 32, "e4m3",
+                      global_scale=jnp.float32(1.0))
+        acc_r = mx_gemm(xt, PerTensorQ(gq.q, jnp.float32(1.0)),
+                        out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(acc_p), np.asarray(acc_r),
+                                   rtol=1e-5,
+                                   atol=float(jnp.abs(acc_r).max()) * 1e-5)
 
 
 class TestOpsDispatch:

@@ -16,12 +16,12 @@ def test_pipeline_matches_sequential():
     code = textwrap.dedent("""
         import numpy as np
         import jax, jax.numpy as jnp
-        from jax.sharding import Mesh, AxisType
+        from repro.compat.jaxapi import mesh_from_devices
         from repro.distributed.pipeline import pipeline_forward
 
         n_stages, n_micro, mb, d = 4, 8, 2, 16
-        mesh = Mesh(np.asarray(jax.devices()).reshape(4,), ("pod",),
-                    axis_types=(AxisType.Auto,))
+        mesh = mesh_from_devices(
+            np.asarray(jax.devices()).reshape(4,), ("pod",))
         key = jax.random.PRNGKey(0)
         W = jax.random.normal(key, (n_stages, d, d)) * 0.3
         x = jax.random.normal(jax.random.fold_in(key, 1),

@@ -1,18 +1,18 @@
-"""Unit + property tests for the quantization core (paper §3.1)."""
+"""Unit + property tests for the quantization core (paper §3.1).
+
+Property sweeps use hypothesis when installed, else the deterministic
+fixed grid from tests/_hypo.py."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.formats import (
     E4M3_MAX,
     E5M2_MAX,
     MOSS_CONFIG,
-    PER_GROUP_CONFIG,
     PER_TENSOR_CONFIG,
-    QuantConfig,
     cast_fp8,
     e8m0_decode,
     e8m0_encode,
@@ -22,12 +22,10 @@ from repro.core.quant import (
     model_snr_per_group,
     model_snr_per_tensor,
     mx_gemm,
-    pt_gemm,
     quant_mx,
     quant_per_group,
     quant_per_tensor,
     scheme_snr,
-    snr_db,
 )
 
 

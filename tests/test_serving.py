@@ -17,6 +17,7 @@ ARCHS = ["phi3-mini-3.8b", "h2o-danube-3-4b", "rwkv6-3b",
          "phi3.5-moe-42b-a6.6b", "minitron-8b"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_teacher_forcing(arch):
     # capacity_factor high so MoE archs drop no tokens in train mode

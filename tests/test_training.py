@@ -7,7 +7,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import manager as ckpt
 from repro.configs.registry import get_config
