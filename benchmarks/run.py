@@ -30,7 +30,14 @@ def _timeit(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6     # us
 
 
+# rows accumulate here so --json can emit the whole run as machine-
+# readable records (the perf-trajectory artifact uploaded by CI)
+_ROWS: list[dict] = []
+
+
 def row(name, us, derived=""):
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -276,27 +283,92 @@ def bench_dispatch_backends(m=256, n=256, k=1024):
         row(f"dispatch_fused_quant_matmul_{backend}_{m}x{n}x{k}", us)
 
 
+# ---------------------------------------------------------------------------
+# Grouped-expert MoE GEMM: one ragged kernel for every expert vs the
+# legacy per-expert vmapped path.  Wall clock is CPU emulation; the
+# structural columns (kernel launches and level-1 amax reductions per
+# MoE block) carry the speedup mechanism.
+# ---------------------------------------------------------------------------
+
+
+def bench_moe_grouped(B: int = 2, S: int = 128, iters: int = 5):
+    from repro.configs.registry import get_config
+    from repro.models import moe
+    from repro.models.layers import (init_tree, quant_mask_tree,
+                                     wrap_qt_nojit)
+
+    # moe_decode_dense=False: without it the small-T single-device
+    # train path short-circuits to the masked dense-experts combine and
+    # the A/B would measure the dense path twice
+    cfg = get_config("phi3.5-moe-42b-a6.6b",
+                     smoke=True).replace(moe_decode_dense=False)
+    qcfg = cfg.quant
+    defs = moe.moe_defs(cfg)
+    params = init_tree(defs, jax.random.PRNGKey(0))
+    qp = wrap_qt_nojit(params, quant_mask_tree(defs))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.bfloat16)
+    e = cfg.n_experts
+    us = {}
+    prior = os.environ.get("REPRO_MOE_EXPERTS")
+    try:
+        for path in ("grouped", "vmapped"):
+            os.environ["REPRO_MOE_EXPERTS"] = path
+
+            def block(x, path=path):
+                return moe.moe_block(cfg, qp, x, qcfg, mode="train")[0]
+
+            us[path] = _timeit(jax.jit(block), x, iters=iters, warmup=2)
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_MOE_EXPERTS", None)
+        else:
+            os.environ["REPRO_MOE_EXPERTS"] = prior
+    row("moe_grouped_vs_vmapped", us["grouped"],
+        f"vmapped_us_{us['vmapped']:.1f}"
+        f"_launches_3_vs_{3 * e}_amax_reductions_1_vs_{e}")
+
+
+def _write_json(path: str) -> None:
+    import json
+
+    with open(path, "w") as f:
+        json.dump(_ROWS, f, indent=1)
+    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
+
+
 def main(argv=None) -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced set: dispatch backends + per-mode "
-                         "train-step timings (CI smoke job)")
+                    help="reduced set: dispatch backends + MoE grouped "
+                         "A/B + per-mode train-step timings (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON records (machine-"
+                         "readable perf trajectory; --smoke defaults "
+                         "to BENCH_moe.json)")
     args = ap.parse_args(argv)
+    if args.smoke and args.json is None:
+        args.json = "BENCH_moe.json"
 
     print("name,us_per_call,derived")
     if args.smoke:
         bench_dispatch_backends(m=128, n=128, k=512)
+        bench_moe_grouped()
         bench_table2_throughput(B=4, S=64, iters=2)
+        _write_json(args.json)
         return
     bench_table1_autoscale()
     bench_table7_snr()
     bench_dispatch_backends()
+    bench_moe_grouped()
     bench_table6_gemm()
     bench_table5_memory_comm()
     bench_table2_throughput()
     bench_table9_interval()
+    if args.json:
+        _write_json(args.json)
 
 
 if __name__ == "__main__":

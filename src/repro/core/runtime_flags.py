@@ -44,6 +44,29 @@ def kernel_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+# MoE expert-GEMM paths (see repro.models.moe):
+#   "grouped" — one ragged grouped-expert kernel per GEMM (3 launches +
+#               1 amax reduction per MoE block; the default)
+#   "vmapped" — legacy jax.vmap over per-expert qlinear (3·E launches +
+#               E reductions; kept for A/B benchmarking)
+MOE_EXPERT_PATHS = ("grouped", "vmapped")
+
+
+def moe_expert_path() -> str:
+    """Active MoE expert path: ``REPRO_MOE_EXPERTS`` env override, else
+    the grouped kernel.  Applies to moss/bf16 train/prefill (bf16
+    grouped is bitwise identical to vmapped); the per-tensor/per-group
+    baselines and the decode path always use the vmapped experts."""
+    env = os.environ.get("REPRO_MOE_EXPERTS", "").strip()
+    if env:
+        if env not in MOE_EXPERT_PATHS:
+            raise ValueError(
+                f"REPRO_MOE_EXPERTS={env!r}: expected one of "
+                f"{MOE_EXPERT_PATHS}")
+        return env
+    return "grouped"
+
+
 def force_bf16_operands(value: bool = True) -> None:
     global _FORCE_BF16
     _FORCE_BF16 = value

@@ -6,6 +6,8 @@
 #   mx_fused.py    fused two-level quantize + GEMM (fwd and bwd-dx)
 #   mx_gemm.py     microscaled GEMM on pre-quantized operands
 #   mx_bwd.py      dW GEMM: fused dequant → transpose → requant along M
+#   moe_gmm.py     grouped-expert ragged GEMM (MoE): fused quantize +
+#                  all expert GEMMs in one launch + the grouped dW
 #   mx_quant.py    standalone fused two-level quantizer
 #   group_gemm.py  COAT per-group baseline (in-loop dequant)
 #   ref.py         pure-jnp oracles (semantics live in repro.core.quant)

@@ -34,6 +34,7 @@ from repro.core.quant import MxQ, PerGroupQ, PerTensorQ
 from repro.core.runtime_flags import KERNEL_BACKENDS, kernel_backend
 from . import ref
 from .group_gemm import GROUP, group_gemm_pallas
+from .moe_gmm import moe_dw_gemm_pallas, moe_gmm_pallas
 from .mx_bwd import mx_dw_gemm_pallas
 from .mx_fused import fused_quant_gemm_pallas
 from .mx_gemm import mx_gemm_pallas
@@ -70,11 +71,11 @@ def _k_block(kp: int) -> int:
     raise AssertionError(f"K={kp} not a multiple of {MICRO}")
 
 
-def _m_block(mp: int) -> int:
+def _m_block(mp: int, min_mult: int = 8) -> int:
     for b in (256, 128, 64, 32, 16, 8):
-        if mp % b == 0:
+        if b >= min_mult and mp % b == 0:
             return b
-    raise AssertionError(f"M={mp} not a multiple of 8")
+    raise AssertionError(f"M={mp} not a multiple of {min_mult}")
 
 
 # ---------------------------------------------------------------------------
@@ -151,12 +152,17 @@ def fused_quant_matmul(x2d: jax.Array, wq: PerTensorQ,
 
 
 def mx_matmul_dw(xq: MxQ, gq: PerTensorQ, fmt: str = "e4m3",
-                 out_dtype=jnp.float32,
+                 out_dtype=jnp.float32, out_rows: int | None = None,
                  backend: str | None = None) -> jax.Array:
     """The dW backward GEMM: requant_M(x̂)ᵀ @ Qg · s_x·s_g, where x̂ is
     the FP8 forward residual and the re-quantization (micro-groups along
     the token dim, level-1 scale pinned to s_x so it cancels — see
-    kernels/mx_bwd.py) is fused into the kernel."""
+    kernels/mx_bwd.py) is fused into the kernel.
+
+    ``out_rows`` is the caller's true (unpadded) K: the residual's K dim
+    carries the micro-group padding, so both branches slice the result
+    to ``[:out_rows, :n]`` here — one shape contract, no caller-side
+    defensive slicing."""
     backend = _resolve(backend)
     micro = xq.q.shape[-1] // xq.sexp.shape[-1]
     m, k = xq.q.shape
@@ -177,7 +183,94 @@ def mx_matmul_dw(xq: MxQ, gq: PerTensorQ, fmt: str = "e4m3",
             _pad_to(_pad_to(xq.sexp, 0, mp), 1, kp // MICRO),
             _pad_to(_pad_to(gq.q, 0, mp), 1, np_),
             fmt=fmt, bm=128, bn=128, bko=_k_block(kp),
-            interpret=backend == "interpret")[:k, :n]
+            interpret=backend == "interpret")
+    acc = acc[:k if out_rows is None else out_rows, :n]
+    return (acc * (xq.s * gq.s)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MOSS grouped-expert (MoE) path — one ragged kernel for every expert
+# ---------------------------------------------------------------------------
+
+
+def moe_grouped_matmul(x2d: jax.Array, group_sizes: jax.Array,
+                       qw_stack: jax.Array, w_scales: jax.Array, *,
+                       capacity: int, fmt: str = "e4m3",
+                       micro_group: int = MICRO, out_dtype=jnp.bfloat16,
+                       backend: str | None = None
+                       ) -> tuple[jax.Array, MxQ]:
+    """Fused two-level quantize + grouped-expert GEMM.
+
+    ``x2d`` is the flat sorted token buffer ``(E·C, K)`` — expert ``e``
+    owns rows ``[e·C, e·C + group_sizes[e])``, the rest of each capacity
+    slot must be zero.  One global amax reduction covers the whole
+    buffer (vs E per-expert reductions on the vmapped path); per-expert
+    weight scales ``w_scales (E,)`` are applied row-wise in the
+    epilogue.  Returns the finished GEMM ``(E·C, N)`` plus the fp8
+    residual of the whole buffer (for the grouped custom-VJP)."""
+    backend = _resolve(backend)
+    t, k = x2d.shape
+    e, kw, n = qw_stack.shape
+    assert kw == k and t == e * capacity, (x2d.shape, qw_stack.shape)
+    assert k % micro_group == 0, \
+        f"K={k} not divisible by micro_group={micro_group}"
+    s = ref.global_scale_ref(x2d, fmt)
+    if backend == "ref" or micro_group != MICRO:
+        xq = Q.quant_mx(x2d, micro_group, fmt, global_scale=s)
+        acc = ref.moe_gmm_ref(xq.q, xq.sexp, qw_stack, capacity)
+    else:
+        np_ = _ceil_to(n, 128)
+        acc, q, sexp = moe_gmm_pallas(
+            x2d, s, _pad_to(qw_stack, 2, np_),
+            group_sizes.astype(jnp.int32), capacity=capacity, fmt=fmt,
+            bm=_m_block(capacity), bn=128, bk=_k_block(k),
+            interpret=backend == "interpret")
+        acc = acc[:, :n]
+        xq = MxQ(q=q, sexp=sexp, s=s)
+    row_scale = s * jnp.repeat(w_scales.astype(jnp.float32), capacity)
+    y = (acc * row_scale[:, None]).astype(out_dtype)
+    return y, xq
+
+
+def moe_grouped_matmul_dw(xq: MxQ, gq: PerTensorQ,
+                          group_sizes: jax.Array, *, capacity: int,
+                          fmt: str = "e4m3", out_dtype=jnp.float32,
+                          out_rows: int | None = None,
+                          backend: str | None = None) -> jax.Array:
+    """The grouped dW backward: per expert, requant_M(x̂_e)ᵀ @ Qg_e over
+    that expert's row range — all experts in one launch, gradient
+    quantized with ONE per-tensor scale.  Returns ``(E, K, N)`` (K
+    sliced to ``out_rows`` when the residual carries micro padding).
+    Per-expert rows are padded here to a micro-group multiple so the
+    along-token requantization never straddles an expert boundary."""
+    backend = _resolve(backend)
+    t, k = xq.q.shape
+    assert t % capacity == 0
+    e = t // capacity
+    n = gq.q.shape[-1]
+    micro = xq.q.shape[-1] // xq.sexp.shape[-1]
+    use_ref = backend == "ref" or micro != MICRO
+    # per-expert rows padded so the along-token requant groups (micro
+    # tokens each) never straddle an expert boundary
+    cp = _ceil_to(capacity, micro if use_ref else MICRO)
+
+    def _pad_rows(a):
+        if cp == capacity:
+            return a
+        return _pad_to(a.reshape(e, capacity, *a.shape[1:]), 1,
+                       cp).reshape(e * cp, *a.shape[1:])
+
+    qx, sexp, qg = _pad_rows(xq.q), _pad_rows(xq.sexp), _pad_rows(gq.q)
+    if use_ref:
+        acc = ref.moe_dw_ref(qx, sexp, qg, cp, fmt, micro)
+    else:
+        np_ = _ceil_to(n, 128)
+        acc = moe_dw_gemm_pallas(
+            qx, sexp, _pad_to(qg, 1, np_),
+            group_sizes.astype(jnp.int32), capacity=cp, fmt=fmt,
+            bm=_m_block(cp, min_mult=MICRO), bn=128,
+            bko=_k_block(k), interpret=backend == "interpret")
+    acc = acc[:, :k if out_rows is None else out_rows, :n]
     return (acc * (xq.s * gq.s)).astype(out_dtype)
 
 

@@ -27,6 +27,47 @@ def group_gemm_ref(qx, sx, qw) -> jax.Array:
                         out_dtype=jnp.float32)
 
 
+def moe_gmm_ref(qx, sexp, qw_stack, capacity: int) -> jax.Array:
+    """Unscaled grouped-expert MX GEMM accumulation: row block
+    ``[e·C, (e+1)·C)`` of ``(Qx·2^sexp)`` against ``qw_stack[e]``, all
+    experts at once.  Rows beyond a group's valid count are zero by the
+    dispatch precondition, so dense per-slot compute is exact."""
+    from repro.core.formats import e8m0_decode
+    from repro.core.runtime_flags import einsum
+
+    t, k = qx.shape
+    e = qw_stack.shape[0]
+    g = k // sexp.shape[-1]
+    ss = e8m0_decode(sexp).astype(jnp.bfloat16)
+    xf = qx.astype(jnp.bfloat16).reshape(t, k // g, g)
+    xf = (xf * ss[..., None]).reshape(e, capacity, k)
+    return einsum("ecd,edf->ecf", xf, qw_stack,
+                  out_dtype=jnp.float32).reshape(t, -1)
+
+
+def moe_dw_ref(qx, sexp, qg, capacity: int, fmt: str = "e4m3",
+               micro: int = 32) -> jax.Array:
+    """Unscaled grouped dW accumulation (E, K, N): per expert slice,
+    dequant the fp8 residual by its level-2 exponents, requantize along
+    the token dim (micro-groups of ``micro`` tokens, level-1 scale
+    pinned to 1 — s_x cancels, see kernels/mx_bwd.py), and contract
+    over that expert's rows."""
+    t, k = qx.shape
+    e = t // capacity
+    n = qg.shape[-1]
+
+    def one(qx_e, se_e, qg_e):
+        x_unit = MxQ(qx_e, se_e, jnp.float32(1.0)).dequant(jnp.float32)
+        xt = Q.quant_mx(x_unit.T, micro, fmt,
+                        global_scale=jnp.float32(1.0))
+        return Q.mx_gemm(xt, PerTensorQ(q=qg_e, s=jnp.float32(1.0)),
+                         out_dtype=jnp.float32)
+
+    return jax.vmap(one)(qx.reshape(e, capacity, k),
+                         sexp.reshape(e, capacity, -1),
+                         qg.reshape(e, capacity, n))
+
+
 def mx_quant_ref(x, s_global, fmt: str = "e4m3"):
     """Two-level quantize given a precomputed global scale."""
     q = Q.quant_mx(x, micro_group=32, fmt=fmt, global_scale=s_global)

@@ -6,6 +6,11 @@ refilled from the queue (continuous batching a la vLLM, jax-native).
 Weights can be pre-quantized to fp8 for decode (halves weight HBM
 traffic — the memory-bound decode roofline win; --fp8-weights).
 
+Per-tensor weight scales are computed ONCE at server build time
+(``serve_weight_scales``) and cached alongside the params: the serving
+weights are frozen, so re-reducing ``max|W|`` for every quantized
+weight on every decode step would be pure waste.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
       --smoke --requests 16 --max-new 32
@@ -24,7 +29,11 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.models.layers import init_tree
 from repro.models.transformer import model_defs
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.train.steps import (
+    make_decode_step,
+    make_prefill_step,
+    serve_weight_scales,
+)
 
 
 @dataclasses.dataclass
@@ -48,8 +57,13 @@ class Server:
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
-        self.prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self.decode = jax.jit(make_decode_step(cfg),
+        # build-time per-tensor scales, cached with the params (QT.s);
+        # every prefill/decode step reuses them instead of re-reducing
+        # max|W| per weight per step
+        self.scales = serve_weight_scales(cfg, params)
+        self.prefill = jax.jit(make_prefill_step(cfg, max_len,
+                                                 scales=self.scales))
+        self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
                               donate_argnums=(1,))
         self.slots: list[Request | None] = [None] * batch_slots
         self.caches = None

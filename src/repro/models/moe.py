@@ -17,7 +17,19 @@ read anyway, so the memory roofline is identical and decode stays
 simple and shardable (DESIGN.md §3).
 
 Router stays f32 and unquantized (tiny, accuracy-critical).  Expert
-GEMMs are MOSS-quantized with *per-expert* scales (vmapped qlinear).
+GEMMs are MOSS-quantized with *per-expert* weight scales.
+
+Expert-GEMM execution (``REPRO_MOE_EXPERTS``, see
+``repro.core.runtime_flags.moe_expert_path``):
+
+  grouped  (default, moss mode)  the flat ``(E·C, d)`` dispatch buffer
+           plus the ragged per-expert row counts (already produced by
+           the sort-based dispatch) go through ONE grouped Pallas
+           kernel per GEMM (``qmm_grouped`` → ``kernels/moe_gmm.py``):
+           3 launches + 1 amax reduction per MoE block.
+  vmapped  legacy ``jax.vmap`` over per-expert ``qlinear``: 3·E
+           launches + E reductions — the A/B benchmarking fallback,
+           and the path for non-moss quant modes and decode.
 """
 
 from __future__ import annotations
@@ -28,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat.jaxapi import shard_map
 from repro.core.formats import QuantConfig
-from repro.core.linear import QT, qlinear
+from repro.core.linear import QT, qlinear, qlinear_grouped
+from repro.core.runtime_flags import moe_expert_path
 from repro.distributed.sharding import _active_mesh
 from .layers import PDef
 
@@ -57,6 +70,37 @@ def _experts_vmapped(cfg, p, xs, qcfg):
     def one(w_up, w_gate, w_down, x):
         return _expert_ffn(cfg, w_up, w_gate, w_down, x, qcfg)
     return jax.vmap(one)(p["w_up"], p["w_gate"], p["w_down"], xs)
+
+
+def _experts_grouped(cfg, p, xs, sizes, qcfg):
+    """All expert FFNs through the grouped ragged kernel: xs (E, C, d)
+    flattened to the sorted token buffer, 3 grouped GEMM launches + 1
+    level-1 amax per GEMM instead of 3·E launches + E reductions.
+
+    ``sizes`` is the ragged per-expert valid-row count from dispatch;
+    None (the post-all_to_all EP case, where the counts live on the
+    source shards) means every capacity slot is treated as full —
+    dense-equivalent compute, still one launch per GEMM."""
+    e, c, d = xs.shape
+    if sizes is None:
+        sizes = jnp.full((e,), c, jnp.int32)
+    flat = xs.reshape(e * c, d)
+    up = qlinear_grouped(flat, p["w_up"], sizes, c, qcfg)
+    gate = qlinear_grouped(flat, p["w_gate"], sizes, c, qcfg)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(flat.dtype) * up
+    y = qlinear_grouped(h, p["w_down"], sizes, c, qcfg)
+    return y.reshape(e, c, d)
+
+
+def _expert_runner(cfg, p, qcfg):
+    """Selects the expert-GEMM path; returns fn(xs, sizes) -> ys.
+
+    moss and bf16 route through the grouped kernel (bf16 grouped is
+    bitwise identical to vmapped — same dots over the same rows); the
+    per-tensor/per-group baselines keep the vmapped experts."""
+    if qcfg.mode in ("moss", "bf16") and moe_expert_path() == "grouped":
+        return lambda xs, sizes: _experts_grouped(cfg, p, xs, sizes, qcfg)
+    return lambda xs, sizes: _experts_vmapped(cfg, p, xs, qcfg)
 
 
 def router_probs(cfg, p, x_flat):
@@ -89,6 +133,11 @@ def _dispatch_combine_local(cfg, x_loc, ids_loc, w_loc, expert_fn,
     sorted_ids = flat_ids[order]
     # position within expert group
     group_start = jnp.searchsorted(sorted_ids, jnp.arange(e))
+    group_end = jnp.searchsorted(sorted_ids, jnp.arange(e), side="right")
+    # ragged per-expert valid-row counts — the grouped kernel's group
+    # sizes (capacity truncation applied, zero-size experts allowed)
+    sizes = jnp.minimum(group_end - group_start,
+                        capacity).astype(jnp.int32)
     pos = jnp.arange(t_loc * k) - group_start[sorted_ids]
     token_of = order // k
     keep = pos < capacity
@@ -101,10 +150,11 @@ def _dispatch_combine_local(cfg, x_loc, ids_loc, w_loc, expert_fn,
     if model_axis is not None:
         xs = jax.lax.all_to_all(xs, model_axis, split_axis=0,
                                 concat_axis=1, tiled=True)
-    ys = expert_fn(xs)                                   # (E_loc, C·m, d)
-    if model_axis is not None:
+        ys = expert_fn(xs, None)   # counts live on the source shards
         ys = jax.lax.all_to_all(ys, model_axis, split_axis=1,
                                 concat_axis=0, tiled=True)
+    else:
+        ys = expert_fn(xs, sizes)                        # (E, C, d)
 
     ybuf = jnp.concatenate(
         [ys.reshape(e * capacity, d),
@@ -159,7 +209,7 @@ def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
                 w_down = jax.lax.all_gather(w_down.w, "data", axis=2, tiled=True), w_down.s
                 w_up, w_gate, w_down = (QT(*w_up), QT(*w_gate), QT(*w_down))
             pl = {"w_up": w_up, "w_gate": w_gate, "w_down": w_down}
-            fn = lambda xs: _experts_vmapped(cfg, pl, xs, qcfg)
+            fn = _expert_runner(cfg, pl, qcfg)
             return _dispatch_combine_local(cfg, x_loc, ids_loc, w_loc, fn,
                                            cap, "model")
 
@@ -181,7 +231,7 @@ def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
 
     # single-device fallback (smoke tests)
     cap = _capacity(cfg, t)
-    fn = lambda xs: _experts_vmapped(cfg, p, xs, qcfg)
+    fn = _expert_runner(cfg, p, qcfg)
     y = _dispatch_combine_local(cfg, x_flat, top_ids, top_w, fn, cap, None)
     return y.reshape(b, s, d), aux
 

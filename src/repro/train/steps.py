@@ -239,13 +239,37 @@ def make_eval_step(cfg):
 # ---------------------------------------------------------------------------
 
 
-def make_prefill_step(cfg, max_len: int):
+def serve_weight_scales(cfg, params):
+    """Per-tensor fp8 scales for a frozen serving model, computed ONCE
+    at build time.  Without these, every prefill/decode step re-reduces
+    ``max|W|`` for every quantized weight inside the jitted graph (the
+    Table-1 traffic automatic scaling removes from training) — for
+    serving the weights never change, so the scales are build-time
+    constants.  Returns None in bf16 mode and for jit/delayed scaling
+    recipes (whose defined semantics are the in-step reduction —
+    ``_quantize_w`` only consumes supplied scales in "auto" mode)."""
+    if not (cfg.quant.quantized and cfg.quant.weight_scaling == "auto"):
+        return None
+    return init_scales(model_defs(cfg), params, cfg.quant)[0]
+
+
+def _wrap_serve(params, mask, scales):
+    """QT-wrap with cached build-time scales when available."""
+    if scales is None:
+        return wrap_qt_nojit(params, mask)
+    return wrap_qt(params, scales, mask)
+
+
+def make_prefill_step(cfg, max_len: int, scales=None):
+    """``scales`` (from ``serve_weight_scales``) threads pre-computed
+    per-tensor weight scales through; None falls back to in-step (jit)
+    scaling — the training-eval behavior."""
     defs = model_defs(cfg)
     mask = quant_mask_tree(defs)
     qcfg = cfg.quant
 
     def prefill_step(params, batch):
-        qp = wrap_qt_nojit(params, mask)
+        qp = _wrap_serve(params, mask, scales)
         b = (batch["tokens"].shape[0] if "tokens" in batch
              else batch["embeds"].shape[0])
         caches = init_caches(cfg, b, max_len)
@@ -256,14 +280,14 @@ def make_prefill_step(cfg, max_len: int):
     return prefill_step
 
 
-def make_decode_step(cfg):
+def make_decode_step(cfg, scales=None):
     defs = model_defs(cfg)
     mask = quant_mask_tree(defs)
     qcfg = cfg.quant
 
     def decode_step(params, caches, tokens):
         """tokens: (B, 1) int32 (or embeds (B,1,d)) -> next logits."""
-        qp = wrap_qt_nojit(params, mask)
+        qp = _wrap_serve(params, mask, scales)
         batch = ({"embeds": tokens} if cfg.input_mode == "embeddings"
                  and tokens.ndim == 3 else {"tokens": tokens})
         logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
