@@ -1,7 +1,20 @@
-"""Inject the §Dry-run and §Roofline tables into EXPERIMENTS.md from the
-recorded artifacts.
+"""Render benchmark artifacts into markdown.
 
-  PYTHONPATH=src python -m benchmarks.report
+Two jobs:
+
+1. Inject the §Dry-run and §Roofline tables into EXPERIMENTS.md from
+   the recorded dry-run artifacts (skipped when EXPERIMENTS.md is
+   absent).
+2. ``--trajectory``: render the per-PR benchmark trajectory table to
+   ``docs/bench-trajectory.md`` from the machine-readable
+   ``BENCH_*.json`` row files (``benchmarks/run.py --smoke`` writes
+   BENCH_moe.json + BENCH_serve.json; CI uploads them per run).
+   Committed snapshots live under ``experiments/bench/<label>/`` —
+   drop a downloaded CI artifact there to extend the table; loose
+   ``./BENCH_*.json`` files from a local run appear as the "local"
+   column.
+
+  PYTHONPATH=src python -m benchmarks.report --trajectory
 """
 
 from __future__ import annotations
@@ -79,7 +92,107 @@ def inject(md_path: str, marker: str, table: str):
     open(md_path, "w").write(text)
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Per-PR benchmark trajectory (ROADMAP "BENCH_moe.json trajectory")
+# ---------------------------------------------------------------------------
+
+# name prefixes worth tracking across PRs (exact-name rows first)
+TRAJECTORY_PREFIXES = ("moe_grouped_vs_vmapped", "dispatch_",
+                       "serve_prequant_", "table2_train_step_")
+
+BENCH_PATTERNS = ("experiments/bench/*/BENCH_*.json", "BENCH_*.json")
+
+
+def load_bench_runs(patterns=BENCH_PATTERNS) -> dict[str, dict]:
+    """label -> {row name -> row}.  A label is the artifact's parent
+    directory under experiments/bench/ (one per PR / CI run snapshot);
+    loose BENCH_*.json in the cwd land under "local"."""
+    runs: dict[str, dict] = {}
+    for pat in patterns:
+        for path in sorted(glob.glob(pat)):
+            parent = os.path.basename(os.path.dirname(path))
+            label = parent if parent not in ("", ".") else "local"
+            for r in json.load(open(path)):
+                runs.setdefault(label, {})[r["name"]] = r
+    return runs
+
+
+def _label_key(label: str):
+    """Chronological column order: prN snapshots by N (pr3 < pr10), then
+    other labels lexicographically, then "local" (the freshest run)."""
+    if label == "local":
+        return (2, 0, label)
+    m = re.match(r"pr(\d+)", label)
+    return (0, int(m.group(1)), label) if m else (1, 0, label)
+
+
+def trajectory_table(runs: dict[str, dict]) -> str:
+    labels = sorted(runs, key=_label_key)
+    names: list[str] = []
+    for label in labels:
+        for name in runs[label]:
+            if name not in names and any(
+                    name.startswith(p) for p in TRAJECTORY_PREFIXES):
+                names.append(name)
+    lines = ["| bench | " + " | ".join(f"{lb} (µs)" for lb in labels)
+             + " | derived (latest) |",
+             "|---|" + "---|" * (len(labels) + 1)]
+    for name in sorted(names):
+        cells, derived = [], ""
+        for lb in labels:
+            r = runs[lb].get(name)
+            cells.append(f"{r['us_per_call']:.1f}" if r else "—")
+            if r and r.get("derived"):
+                derived = r["derived"]
+        lines.append(f"| {name} | " + " | ".join(cells)
+                     + f" | {derived} |")
+    return "\n".join(lines)
+
+
+def write_trajectory(out_path: str = "docs/bench-trajectory.md") -> bool:
+    runs = load_bench_runs()
+    if not runs:
+        # the CI docs job runs this to prove the committed page can be
+        # regenerated — an empty artifact set means the snapshots under
+        # experiments/bench/ went missing, which must FAIL, not no-op
+        raise SystemExit("no BENCH_*.json artifacts found (expected "
+                         "committed snapshots under experiments/bench/"
+                         "<label>/); trajectory not written")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    body = (
+        "# Benchmark trajectory\n\n"
+        "Machine-readable rows from `benchmarks/run.py --smoke` "
+        "(`BENCH_moe.json`, `BENCH_serve.json`), one column per "
+        "snapshot under `experiments/bench/<label>/`.  Regenerate "
+        "with:\n\n"
+        "```bash\nPYTHONPATH=src python benchmarks/run.py --smoke\n"
+        "PYTHONPATH=src python -m benchmarks.report --trajectory\n"
+        "```\n\n"
+        "Wall clocks are CPU fp8 *emulation* — the structural columns "
+        "(launch/amax/cast counts in `derived`) carry the speedup "
+        "mechanism; see [serving.md](serving.md) and the kernel notes "
+        "in [kernel-contract.md](kernel-contract.md).\n\n"
+        + trajectory_table(runs) + "\n")
+    open(out_path, "w").write(body)
+    print(f"wrote {out_path} ({len(runs)} snapshot(s))")
+    return True
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trajectory", action="store_true",
+                    help="render docs/bench-trajectory.md from "
+                         "BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+    if args.trajectory:
+        write_trajectory()
+        return
+    if not os.path.exists("EXPERIMENTS.md"):
+        print("EXPERIMENTS.md not present; nothing to inject "
+              "(use --trajectory for docs/bench-trajectory.md)")
+        return
     recs = load_records()
     inject("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table(recs))
     inject("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table(recs))

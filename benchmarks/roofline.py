@@ -135,6 +135,69 @@ def bottleneck_hint(analysis: dict, record: dict) -> str:
             "(less padding), or drop remat recompute on the cheap ops")
 
 
+def kv_cache_traffic(cfg, shape) -> dict | None:
+    """Analytic per-decode-step KV-cache HBM read, bf16 vs fp8 storage
+    (the serving default — configs/base.py ``kv_cache_dtype``).
+
+    Every decode step reads the whole valid cache: K and V payloads of
+    ``C = min(seq, window)`` positions × n_kv heads × head_dim per
+    layer, plus (fp8 only) the per-(token, kv-head) f32 scales.  The
+    ratio is the structural HBM-traffic claim of the fp8 cache:
+    2 / (1 + 4/head_dim) ≈ 2× for the assigned head dims.
+
+    Returns None for archs without a per-head KV cache (SSM states;
+    MLA's absorbed latent cache is already compressed and stays bf16).
+    """
+    if cfg.family == "ssm" or cfg.kv_lora:
+        return None
+    n_attn = cfg.n_layers // 3 if cfg.family == "hybrid" else cfg.n_layers
+    c = min(shape.seq_len, cfg.window) if (cfg.attn_type in ("swa", "local")
+                                           or cfg.family == "hybrid") \
+        else shape.seq_len
+    elems = 2 * shape.global_batch * c * cfg.n_kv * cfg.head_dim  # K and V
+    scales = 2 * shape.global_batch * c * cfg.n_kv                # fp8 only
+    bytes_bf16 = 2 * elems * n_attn
+    bytes_fp8 = (elems + 4 * scales) * n_attn
+    return {"kv_bytes_bf16": bytes_bf16, "kv_bytes_fp8": bytes_fp8,
+            "kv_read_ratio": round(bytes_bf16 / bytes_fp8, 3),
+            "kv_s_bf16": round(bytes_bf16 / HBM_BW, 6),
+            "kv_s_fp8": round(bytes_fp8 / HBM_BW, 6)}
+
+
+def kv_traffic_rows() -> list[dict]:
+    """One fp8-vs-bf16 KV HBM-traffic row per decode-bound cell —
+    structural (config-derived), needs no dry-run artifacts."""
+    from repro.configs.base import SHAPES, shape_applicable
+    from repro.configs.registry import ASSIGNED, get_config
+
+    rows = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape.kind != "decode" or not shape_applicable(cfg, shape)[0]:
+                continue
+            t = kv_cache_traffic(cfg, shape)
+            if t is None:
+                continue
+            rows.append({"arch": arch, "shape": shape.name, **t})
+    return rows
+
+
+def print_kv_traffic(rows: list[dict]) -> None:
+    hdr = (f"{'arch':25s} {'shape':12s} {'KV bf16 B/step':>15s} "
+           f"{'KV fp8 B/step':>14s} {'ratio':>6s} {'mem(s) bf16':>12s} "
+           f"{'mem(s) fp8':>11s}")
+    print("\n# fp8 KV cache: per-decode-step HBM read (serving default "
+          "vs kv_cache_dtype=\"bf16\")")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:25s} {r['shape']:12s} "
+              f"{r['kv_bytes_bf16']:15.3e} {r['kv_bytes_fp8']:14.3e} "
+              f"{r['kv_read_ratio']:6.2f} {r['kv_s_bf16']:12.4f} "
+              f"{r['kv_s_fp8']:11.4f}")
+
+
 def main(out_path: str | None = None):
     rows = []
     for path in sorted(glob.glob("experiments/dryrun/*.json")):
@@ -168,9 +231,12 @@ def main(out_path: str | None = None):
             f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.4f}")
     table = "\n".join(lines)
     print(table)
+    kv_rows = kv_traffic_rows()
+    print_kv_traffic(kv_rows)
     if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
         with open(out_path, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump({"cells": rows, "kv_traffic": kv_rows}, f, indent=1)
     return rows
 
 

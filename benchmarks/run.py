@@ -329,12 +329,64 @@ def bench_moe_grouped(B: int = 2, S: int = 128, iters: int = 5):
         f"_launches_3_vs_{3 * e}_amax_reductions_1_vs_{e}")
 
 
-def _write_json(path: str) -> None:
+# ---------------------------------------------------------------------------
+# Pre-quantized serving: decode step time + structural op counts with
+# in-graph weight quantization vs build-time fp8 weights
+# (PrequantParams).  The op counts (weight fp8 casts, max-reductions in
+# the decode jaxpr) are the mechanism; CPU wall clock is emulation.
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_prequant(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.core.formats import PER_GROUP_CONFIG
+    from repro.core.introspect import (count_fp8_casts, count_primitive,
+                                       weight_slice_sizes)
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.train.steps import (make_decode_step, make_prefill_step,
+                                   prequantize_params, serve_weight_scales)
+
+    for mode, quant in (("per_group", PER_GROUP_CONFIG), ("moss", None)):
+        cfg = get_config(arch, smoke=True)
+        if quant is not None:
+            cfg = cfg.replace(quant=quant)
+        params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                  cfg.vocab)
+        tok1 = toks[:, :1]
+        wsizes = weight_slice_sizes(cfg)
+
+        stats = {}
+        for tag in ("ingraph", "prequant"):
+            if tag == "prequant":
+                pq = prequantize_params(cfg, params)
+                p, scales = pq.qweights, pq.scales
+            else:
+                p, scales = params, serve_weight_scales(cfg, params)
+            pre = jax.jit(make_prefill_step(cfg, 32, scales=scales))
+            _, caches = pre(p, {"tokens": toks})
+            step = make_decode_step(cfg, scales=scales)
+            jx = jax.make_jaxpr(step)(p, caches, tok1)
+            dec = jax.jit(step)
+            us = _timeit(lambda c: dec(p, c, tok1)[0], caches,
+                         iters=10, warmup=2)
+            stats[tag] = (us, count_primitive(jx, "reduce_max"),
+                          count_fp8_casts(jx, wsizes))
+        us_pq, amax_pq, wc_pq = stats["prequant"]
+        us_no, amax_no, wc_no = stats["ingraph"]
+        row(f"serve_prequant_decode_{mode}", us_pq,
+            f"ingraph_us_{us_no:.1f}_amax_{amax_pq}_vs_{amax_no}"
+            f"_weight_fp8_casts_{wc_pq}_vs_{wc_no}")
+
+
+def _write_json(path: str, rows=None) -> None:
     import json
 
+    rows = _ROWS if rows is None else rows
     with open(path, "w") as f:
-        json.dump(_ROWS, f, indent=1)
-    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows to {path}", flush=True)
 
 
 def main(argv=None) -> None:
@@ -357,7 +409,12 @@ def main(argv=None) -> None:
         bench_dispatch_backends(m=128, n=128, k=512)
         bench_moe_grouped()
         bench_table2_throughput(B=4, S=64, iters=2)
+        bench_serve_prequant()
         _write_json(args.json)
+        # serving rows also land in their own artifact (consumed by
+        # benchmarks/report.py --trajectory alongside BENCH_moe.json)
+        _write_json("BENCH_serve.json",
+                    [r for r in _ROWS if r["name"].startswith("serve_")])
         return
     bench_table1_autoscale()
     bench_table7_snr()
@@ -367,6 +424,7 @@ def main(argv=None) -> None:
     bench_table5_memory_comm()
     bench_table2_throughput()
     bench_table9_interval()
+    bench_serve_prequant()
     if args.json:
         _write_json(args.json)
 

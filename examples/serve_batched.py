@@ -1,5 +1,7 @@
 """Batched serving example: continuous batching over a request queue
-with prefill + decode on a MOSS-quantized model.
+with prefill + decode on a MOSS-quantized model — the fp8-at-rest
+serving defaults: build-time pre-quantized weights (PrequantParams)
+and the fp8 KV cache (docs/serving.md).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -33,6 +35,12 @@ def main():
     print(f"{len(requests)} requests, 4 decode slots "
           f"(continuous batching)")
     server = Server(cfg, params, batch_slots=4, max_len=64)
+    from repro.core.runtime_flags import serve_prequant
+    from repro.models.attention import resolve_kv_cache_dtype
+    print(f"weights: {'pre-quantized fp8 (PrequantParams)' if server.prequant else 'in-graph quantize (REPRO_SERVE_PREQUANT=0)'}"
+          f" | kv cache: {resolve_kv_cache_dtype(cfg)}")
+    assert (server.prequant is not None) == (serve_prequant()
+                                            and cfg.quant.quantized)
     done = server.run(requests)
     for r in done[:3]:
         print(f"request {r.rid}: prompt[:6]={r.prompt[:6].tolist()} "

@@ -30,7 +30,9 @@ import jax
 
 __all__ = [
     "AxisType",
+    "ClosedJaxpr",
     "HAS_AXIS_TYPES",
+    "Jaxpr",
     "abstract_mesh",
     "cost_analysis",
     "make_mesh",
@@ -126,6 +128,16 @@ else:
         # check_vma (varying-mesh-axes) is the successor of check_rep
         return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_rep=check_vma)
+
+
+# --------------------------------------------------------------------------
+# Jaxpr / ClosedJaxpr classes (for jaxpr introspection)
+# --------------------------------------------------------------------------
+
+try:  # newer jax: jax.core.Jaxpr deprecated/removed in favor of extend
+    from jax.extend.core import ClosedJaxpr, Jaxpr  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.core import ClosedJaxpr, Jaxpr  # type: ignore[no-redef]
 
 
 # --------------------------------------------------------------------------

@@ -72,8 +72,15 @@ class ModelConfig:
 
     # --- training-shape knobs ---
     attn_chunk: int = 512              # flash-chunk size (queries and kv)
-    kv_cache_dtype: Literal["bf16", "fp8"] = "bf16"  # fp8: e4m3 +
-    # per-(token, kv-head) scales — halves decode HBM traffic
+    # KV-cache storage for the decode-bound serving shapes: fp8 (e4m3
+    # payload + per-(token, kv-head) f32 scales) by default — decode is
+    # memory-roofline-bound and the cache read dominates, so 1 byte/
+    # element ~halves step HBM traffic (benchmarks/roofline.py).
+    # "bf16" is the exactness escape hatch; REPRO_KV_CACHE overrides
+    # either way at cache init (models/attention.py).  Training never
+    # builds caches, so this has no effect on the training path; MLA's
+    # absorbed latent cache ignores it.
+    kv_cache_dtype: Literal["bf16", "fp8"] = "fp8"
     moe_decode_dense: bool = True      # decode path: masked dense experts
     remat: bool = True
     scan_layers: bool = True

@@ -1,0 +1,113 @@
+"""Jaxpr introspection: structural op counts for the serving contract.
+
+The pre-quantized serving path (docs/serving.md) promises that the
+decode graph contains **zero weight quantize / weight max-reduction
+ops** — a structural property, checked directly on the jaxpr rather
+than inferred from wall clock (which on CPU measures fp8 emulation).
+Used by ``tests/test_serving.py`` and ``benchmarks/run.py``'s
+``BENCH_serve.json`` rows.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat.jaxapi import ClosedJaxpr, Jaxpr
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Depth-first over every equation of a (Closed)Jaxpr, descending
+    into sub-jaxprs (scan/while bodies, cond branches, pjit calls,
+    custom_vjp calls) via the eqn params."""
+    if isinstance(jaxpr, ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(val):
+    if isinstance(val, (ClosedJaxpr, Jaxpr)):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _sub_jaxprs(v)
+    elif callable(val) and hasattr(val, "jaxpr"):   # pjit's WrappedFun-likes
+        sub = getattr(val, "jaxpr")
+        if isinstance(sub, (ClosedJaxpr, Jaxpr)):
+            yield sub
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` (e.g. "reduce_max") anywhere in
+    the jaxpr, sub-jaxprs included.  NOTE: an op inside a scan body is
+    counted once, not once per trip — counts are *structural*."""
+    return sum(1 for e in iter_eqns(jaxpr) if e.primitive.name == name)
+
+
+def count_reduce_max_over(jaxpr, sizes: set[int]) -> int:
+    """reduce_max equations whose operand element count is in ``sizes``
+    — with the quantized weight-slice sizes this counts *weight* amax
+    reductions (the in-graph scale computation pre-quantization
+    removes)."""
+    n = 0
+    for e in iter_eqns(jaxpr):
+        if e.primitive.name != "reduce_max":
+            continue
+        op_size = 1
+        for d in e.invars[0].aval.shape:
+            op_size *= d
+        if op_size in sizes:
+            n += 1
+    return n
+
+
+_FP8_DTYPES = (jnp.float8_e4m3fn, jnp.float8_e5m2)
+
+
+def count_fp8_casts(jaxpr, sizes: set[int] | None = None) -> int:
+    """convert_element_type-to-fp8 equations, optionally restricted to
+    operands whose element count is in ``sizes`` — pass the quantized
+    weight-slice sizes (``weight_slice_sizes``) to count *weight*
+    quantizations only (activation casts have per-token-batch sizes,
+    disjoint from weight sizes for any realistic config)."""
+    n = 0
+    for e in iter_eqns(jaxpr):
+        if e.primitive.name != "convert_element_type":
+            continue
+        if e.params.get("new_dtype") not in _FP8_DTYPES:
+            continue
+        op_size = 1
+        for d in e.invars[0].aval.shape:
+            op_size *= d
+        if sizes is None or op_size in sizes:
+            n += 1
+    return n
+
+
+def weight_slice_sizes(cfg) -> set[int]:
+    """Element counts of every quantized weight's per-(layer, expert)
+    slice — the shapes the scan-over-layers forward quantizes (and the
+    shapes a weight-quantize cast would have in the decode jaxpr)."""
+    from repro.models.layers import PDef, is_pdef
+    from repro.models.transformer import model_defs
+    from repro.train.steps import _scale_dims
+
+    defs = model_defs(cfg)
+    sdims = _scale_dims(defs)
+    sizes: set[int] = set()
+
+    def add(d: PDef, nd: int):
+        n = 1
+        for dim in d.shape[nd:]:
+            n *= dim
+        if d.quantized:
+            sizes.add(n)
+
+    jax.tree.map(add, defs, sdims, is_leaf=is_pdef)
+    return sizes

@@ -47,10 +47,19 @@ class QT(NamedTuple):
 
     ``s`` is None in bf16 mode or for never-quantized params (norms,
     routers, recurrence gates); model code unwraps ``.w`` for those.
+
+    Serving fast path: ``w`` may arrive *already quantized* (fp8 dtype,
+    from ``repro.core.quant.PrequantParams``) with ``s`` its build-time
+    dequant scale — ``_quantize_w`` detects the dtype and skips the
+    in-graph quantize + max-reduction entirely (docs/serving.md).
     """
 
     w: jax.Array
     s: jax.Array | None = None
+
+
+def _is_fp8(w: jax.Array) -> bool:
+    return w.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2)
 
 
 def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -80,7 +89,14 @@ def qmm(cfg: QuantConfig, x: jax.Array, w: jax.Array,
 
 def _quantize_w(cfg: QuantConfig, w: jax.Array, w_scale: jax.Array):
     """Per-tensor weight quantization.  With automatic scaling the scale
-    is the *predicted* one — no max-reduction over w in the HLO."""
+    is the *predicted* one — no max-reduction over w in the HLO.
+
+    Pre-quantized serving weights (fp8 dtype, built once by
+    ``prequantize_params``) pass straight through: ``w_scale`` is their
+    build-time dequant scale and the graph contains neither the cast
+    nor the reduction."""
+    if _is_fp8(w):
+        return PerTensorQ(q=w, s=jnp.asarray(w_scale, jnp.float32))
     if cfg.weight_cast_bf16:
         w = w.astype(jnp.bfloat16)
     if cfg.weight_scaling == "auto":

@@ -81,6 +81,59 @@ class MxQ(NamedTuple):
         return 8.0 + 8.0 / g
 
 
+class PrequantParams(NamedTuple):
+    """A whole model's weights pre-quantized for serving (built ONCE at
+    ``Server`` construction by ``repro.train.steps.prequantize_params``).
+
+    qweights   the params pytree with every *quantized* linear weight
+               replaced by its fp8 payload (never-quantized leaves —
+               norms, routers, embeddings — stay raw f32/bf16)
+    scales     matching pytree of f32 per-(layer, expert)-slice dequant
+               scales (one scalar per stacked slice; the leading dims
+               mirror the leaf's stacked layer/expert dims)
+
+    ``qweights`` is passed wherever the raw params tree was passed; the
+    fp8 dtype is the marker ``repro.core.linear._quantize_w`` uses to
+    skip the in-graph quantize + max-reduction entirely.  Payloads are
+    bit-identical to what the in-graph quantizer would produce, so
+    serving outputs match the in-graph path bitwise
+    (tests/test_serving.py).
+    """
+
+    qweights: jax.Array | dict
+    scales: jax.Array | dict
+
+
+def prequant_weight(w: jax.Array, n_stacked: int, fmt: FP8Format = "e4m3",
+                    scale: jax.Array | None = None,
+                    cast_bf16: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Build-time per-tensor fp8 quantization of one stacked weight leaf.
+
+    ``w`` has ``n_stacked`` leading layer/expert dims, each slice getting
+    an independent per-tensor scale (shape ``w.shape[:n_stacked]``) —
+    exactly the slices the scan-over-layers forward quantizes one at a
+    time.  Bitwise-matches the in-graph ``quant_per_tensor``:
+
+      scale = max(amax(slice), TINY) / FP8_MAX   (or the supplied
+              predicted scale, for "auto" recipes)
+      q     = saturating_cast_fp8(slice / scale)
+
+    ``cast_bf16`` replicates ``QuantConfig.weight_cast_bf16`` (the bf16
+    round-trip before quantization).  Returns ``(q fp8, scale f32)``.
+    """
+    if cast_bf16:
+        w = w.astype(jnp.bfloat16)
+    wf = w.astype(jnp.float32)
+    if scale is None:
+        axes = tuple(range(n_stacked, w.ndim))
+        amax = jnp.max(jnp.abs(wf), axis=axes)
+        scale = jnp.maximum(amax, TINY) / fp8_max(fmt)
+    scale = jnp.asarray(scale, jnp.float32)
+    sb = scale.reshape(scale.shape + (1,) * (w.ndim - scale.ndim))
+    return cast_fp8(wf / sb, fmt), scale
+
+
 # ---------------------------------------------------------------------------
 # Quantizers
 # ---------------------------------------------------------------------------

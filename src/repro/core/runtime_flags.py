@@ -67,6 +67,35 @@ def moe_expert_path() -> str:
     return "grouped"
 
 
+# Serving weight pre-quantization (see repro.train.steps.
+# prequantize_params and launch/serve.py): quantize the whole weight
+# stack to fp8 payloads + scales ONCE at Server build time so the
+# decode/prefill graphs contain no weight quantize or max-reduction
+# ops.  REPRO_SERVE_PREQUANT=0 is the escape hatch back to in-graph
+# quantization (the training-eval behavior).
+def serve_prequant() -> bool:
+    """Whether the serving path pre-quantizes weights at build time."""
+    return os.environ.get("REPRO_SERVE_PREQUANT", "1").strip() != "0"
+
+
+# KV-cache storage dtype (see repro.models.attention.resolve_kv_cache_
+# dtype): per-arch configs default to "fp8" for the decode-bound
+# shapes; REPRO_KV_CACHE overrides every config in both directions.
+KV_CACHE_DTYPES = ("bf16", "fp8")
+
+
+def kv_cache_override() -> str | None:
+    """``REPRO_KV_CACHE`` env override for the KV-cache storage dtype,
+    or None to use the per-arch config value."""
+    env = os.environ.get("REPRO_KV_CACHE", "").strip()
+    if not env:
+        return None
+    if env not in KV_CACHE_DTYPES:
+        raise ValueError(
+            f"REPRO_KV_CACHE={env!r}: expected one of {KV_CACHE_DTYPES}")
+    return env
+
+
 def force_bf16_operands(value: bool = True) -> None:
     global _FORCE_BF16
     _FORCE_BF16 = value

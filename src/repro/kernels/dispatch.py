@@ -22,6 +22,12 @@ across backends.  Zero padding is exact under every quantizer here
 Kernels hardcode the paper's micro-group of 32 and COAT group of 128;
 non-default geometries silently take the reference path (they exist
 only for ablations).
+
+Weight operands always arrive here as fp8 payload + f32 scale
+(``PerTensorQ``) — whether quantized in-graph by ``core.linear``
+(training) or once at server build time (``PrequantParams``,
+docs/serving.md) is invisible at this layer.  The full shape/padding
+contract is written down in docs/kernel-contract.md.
 """
 
 from __future__ import annotations

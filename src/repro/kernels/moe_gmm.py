@@ -33,6 +33,31 @@ pads per-expert rows to a micro-group multiple for dW).  Semantics are
 defined over ALL ``E·C`` rows — group sizes are a compute-skipping hint
 that is exact because rows beyond a group's size are zero (amax of a
 zero micro-group clamps to the E8M0 floor → q = 0 → contributes 0).
+
+Operand contract (see docs/kernel-contract.md)
+----------------------------------------------
+``moe_gmm_pallas``:
+  x           (E·C, K)   f32/bf16 — flat sorted token buffer
+  s_global    ()         f32      — ONE level-1 scale for the buffer
+  qw_stack    (E, K, N)  fp8      — per-expert per-tensor payloads;
+                                    the (E,) f32 scales stay with the
+                                    caller (row-wise epilogue)
+  group_sizes (E,)       int32    — scalar-prefetch (SMEM) operand
+  returns acc (E·C, N) f32 UNSCALED, q (E·C, K) fp8,
+          sexp (E·C, K//32) int8
+``moe_dw_gemm_pallas``:
+  qx (E·C, K) fp8 + sexp (E·C, K//32) int8 — grouped forward residual
+  qg (E·C, N) fp8 — gradient, ONE per-tensor scale for the buffer
+  returns (E, K, N) f32 UNSCALED stacked dW
+
+Two-level scale convention matches mx_fused/mx_bwd: fp8 payloads are
+in units of their level-1 scale; epilogues (s_x·s_w[e] row-wise for
+forward, s_x·s_g for dW) live in the dispatch layer.
+
+Padding is CALLER-owned (repro.kernels.dispatch): N zero-padded to a
+bn multiple, K to a micro-group multiple, and — for dW — each expert's
+capacity slot padded to a 32-row multiple so along-token micro-groups
+never straddle experts.  These functions assert, never pad.
 """
 
 from __future__ import annotations
@@ -108,7 +133,9 @@ def moe_gmm_pallas(x, s_global, qw_stack, group_sizes, *, capacity: int,
     level-1 scale; qw_stack: (E, K, N) fp8; group_sizes: (E,) int32.
     Returns (acc f32 (E·C, N) UNSCALED, q fp8 (E·C, K), sexp int8
     (E·C, K//32)); the caller applies the s_x·s_w[e] row-wise epilogue
-    and owns the residual."""
+    and owns the residual.  Caller owns padding/alignment: C % bm == 0,
+    N % bn == 0, K % bk == 0, bk % 32 == 0 are asserted, never fixed
+    up here (docs/kernel-contract.md)."""
     t, k = x.shape
     e, kw, n = qw_stack.shape
     assert kw == k and k % MICRO == 0

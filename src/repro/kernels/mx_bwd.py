@@ -26,6 +26,25 @@ per M-block the kernel dequants Qx·2^sexp, transposes in-VMEM, requants
 along M, rescales the operand by 2^e', and accumulates the MXU dot with
 the E5M2 gradient tile.  Epilogue (× s_x·s_g) happens in the dispatch
 layer.
+
+Operand contract (see docs/kernel-contract.md)
+----------------------------------------------
+  qx      (M, K)      fp8  — the forward residual payload (E4M3)
+  sexp    (M, K//32)  int8 — its level-2 E8M0 exponents
+  qg      (M, N)      fp8  — per-tensor-quantized gradient payload
+                             (E5M2 by default); s_g stays with caller
+  returns (K, N) f32 UNSCALED dW accumulation
+
+Two-level scale convention: both fp8 operands are in "units of their
+level-1 scale" — qx·2^sexp ≡ x/s_x and qg ≡ g/s_g — so the caller's
+epilogue is one multiply by s_x·s_g.  The in-kernel requant along M
+re-uses s_x as its level-1 scale, which is why s_x never appears in
+the kernel arithmetic.
+
+Padding is CALLER-owned (repro.kernels.dispatch): M zero-padded to a
+bm (and 32) multiple, N to bn, K to bko; the residual's K may carry
+the forward's micro-group padding — the caller slices the result rows
+back with ``out_rows`` in ``dispatch.mx_matmul_dw``.
 """
 
 from __future__ import annotations
@@ -87,7 +106,9 @@ def mx_dw_gemm_pallas(qx, sexp, qg, *, fmt: str = "e4m3", bm: int = 128,
                       interpret: bool = False):
     """qx: (M, K) fp8 forward residual; sexp: (M, K//32) int8; qg: (M, N)
     fp8 gradient (per-tensor scaled).  Returns the UNSCALED f32 dW
-    accumulation (K, N); the caller applies s_x·s_g in the epilogue."""
+    accumulation (K, N); the caller applies s_x·s_g in the epilogue.
+    Caller owns padding: M % 32 == 0 and block divisibility of (M, N,
+    K) are asserted, never fixed up here."""
     m, k = qx.shape
     n = qg.shape[1]
     assert qg.shape[0] == m and sexp.shape == (m, k // MICRO)

@@ -24,6 +24,25 @@ N-block — dead writes the Mosaic pipeliner keeps in VMEM.
 VMEM working set at the default (128, 128, 512) blocks:
   bm·bk·4 (x) + bk·bn (qw) + bm·bn·4 (acc) + bm·bk (q) + bm·bk/32 (se)
 ≈ 0.45 MiB ≪ 16 MiB, leaving headroom for double buffering.
+
+Operand contract (see docs/kernel-contract.md)
+----------------------------------------------
+  x         (M, K) f32/bf16 — the unquantized LHS
+  s_global  ()     f32      — precomputed level-1 scale (one amax over
+                              x, done by the dispatch layer)
+  qw        (K, N) fp8      — per-tensor-quantized RHS *payload*; its
+                              f32 scale s_w stays with the caller
+  returns   acc (M, N) f32 UNSCALED, q (M, K) fp8, sexp (M, K//32) int8
+
+Two-level scale convention: the effective scale of LHS micro-group g is
+``s_global · 2^sexp[g]`` with ``2^sexp ∈ (0, 1]``; the kernel applies
+only the exponent part on the operand path (exact in bf16), so the
+caller's single epilogue multiply is ``acc · s_global · s_w``.
+
+Padding is CALLER-owned (repro.kernels.dispatch): M and N zero-padded
+to block multiples, K to a micro-group multiple; this function only
+*asserts* divisibility.  Zero padding is exact — a zero micro-group
+quantizes to q = 0 at the E8M0 floor and contributes nothing.
 """
 
 from __future__ import annotations
@@ -82,9 +101,13 @@ def _fused_quant_gemm_kernel(x_ref, s_ref, qw_ref, o_ref, q_ref, se_ref,
 def fused_quant_gemm_pallas(x, s_global, qw, *, fmt: str = "e4m3",
                             bm: int = 128, bn: int = 128, bk: int = 512,
                             interpret: bool = False):
-    """x: (M, K) f32/bf16; s_global: () f32 level-1 scale; qw: (K, N) fp8.
-    Returns (acc f32 (M, N) UNSCALED, q fp8 (M, K), sexp int8 (M, K//32));
-    the caller applies the s_x·s_w epilogue and owns the residual."""
+    """x: (M, K) f32/bf16; s_global: () f32 level-1 scale; qw: (K, N)
+    fp8 payload (e4m3/e5m2 per ``fmt``; the RHS f32 scale stays with
+    the caller).  Returns (acc f32 (M, N) UNSCALED, q fp8 (M, K),
+    sexp int8 (M, K//32)); the caller applies the s_x·s_w epilogue and
+    owns the residual.  The caller also owns padding: M % bm == 0,
+    N % bn == 0, K % bk == 0 and bk % 32 == 0 are asserted, never
+    fixed up here (see the module docstring / docs/kernel-contract.md)."""
     m, k = x.shape
     n = qw.shape[1]
     assert k == qw.shape[0] and k % MICRO == 0

@@ -3,13 +3,17 @@ queue with prefill + decode steps and per-slot stop handling.
 
 Requests enter a fixed-size batch of decode slots; finished slots are
 refilled from the queue (continuous batching a la vLLM, jax-native).
-Weights can be pre-quantized to fp8 for decode (halves weight HBM
-traffic — the memory-bound decode roofline win; --fp8-weights).
 
-Per-tensor weight scales are computed ONCE at server build time
-(``serve_weight_scales``) and cached alongside the params: the serving
-weights are frozen, so re-reducing ``max|W|`` for every quantized
-weight on every decode step would be pure waste.
+The whole weight stack is pre-quantized to fp8 payloads + scales ONCE
+at server build time (``prequantize_params`` -> ``PrequantParams``):
+the serving weights are frozen, so quantizing them — or even just
+re-reducing ``max|W|`` — inside every prefill/decode step would be
+pure waste.  The decode graph therefore contains zero weight quantize
+or max-reduction ops and reads 1 byte/element of weight HBM traffic
+(the memory-bound decode roofline win); the KV cache is fp8 by default
+for the same reason (docs/serving.md).  ``REPRO_SERVE_PREQUANT=0``
+falls back to cached-scale in-graph quantization; ``REPRO_KV_CACHE=
+bf16`` restores the bf16 cache.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
@@ -29,9 +33,11 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.models.layers import init_tree
 from repro.models.transformer import model_defs
+from repro.core.runtime_flags import serve_prequant
 from repro.train.steps import (
     make_decode_step,
     make_prefill_step,
+    prequantize_params,
     serve_weight_scales,
 )
 
@@ -54,13 +60,21 @@ class Server:
 
     def __init__(self, cfg, params, batch_slots: int, max_len: int):
         self.cfg = cfg
-        self.params = params
         self.B = batch_slots
         self.max_len = max_len
-        # build-time per-tensor scales, cached with the params (QT.s);
-        # every prefill/decode step reuses them instead of re-reducing
-        # max|W| per weight per step
-        self.scales = serve_weight_scales(cfg, params)
+        # build-time weight pre-quantization: the full fp8 payload +
+        # scale stack replaces the f32 params for every serving step —
+        # no weight quantize/max-reduction ops in the jitted graphs.
+        # REPRO_SERVE_PREQUANT=0 falls back to cached per-tensor
+        # scales (in-graph quantize against frozen scales).
+        self.prequant = (prequantize_params(cfg, params)
+                         if serve_prequant() else None)
+        if self.prequant is not None:
+            self.params = self.prequant.qweights
+            self.scales = self.prequant.scales
+        else:
+            self.params = params
+            self.scales = serve_weight_scales(cfg, params)
         self.prefill = jax.jit(make_prefill_step(cfg, max_len,
                                                  scales=self.scales))
         self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),

@@ -68,10 +68,22 @@ def cache_len(cfg, max_len: int) -> int:
     return min(max_len, w) if w else max_len
 
 
+def resolve_kv_cache_dtype(cfg) -> str:
+    """Active KV-cache storage dtype: ``REPRO_KV_CACHE`` env override,
+    else the per-arch config (default "fp8" — decode is memory-bound
+    and the fp8 cache halves the dominant HBM-read term; docs/
+    serving.md).  Only consulted at cache *init*: an existing cache
+    keeps its layout.  MLA's absorbed latent cache ignores this (it is
+    already ~an order of magnitude smaller than per-head K/V)."""
+    from repro.core.runtime_flags import kv_cache_override
+
+    return kv_cache_override() or cfg.kv_cache_dtype
+
+
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
     c = cache_len(cfg, max_len)
     shape = (batch, c, cfg.n_kv, cfg.head_dim)
-    if cfg.kv_cache_dtype == "fp8":
+    if resolve_kv_cache_dtype(cfg) == "fp8":
         return KVCache(k=jnp.zeros(shape, jnp.float8_e4m3fn),
                        v=jnp.zeros(shape, jnp.float8_e4m3fn),
                        k_scale=jnp.zeros(shape[:-1], jnp.float32),
@@ -88,7 +100,7 @@ def cache_logical(cfg) -> KVCache:
     drops whichever doesn't divide)."""
     kv = ("batch", "kv_seq", "kv_heads", None)
     sc = ("batch", "kv_seq", "kv_heads")
-    fp8 = cfg.kv_cache_dtype == "fp8"
+    fp8 = resolve_kv_cache_dtype(cfg) == "fp8"
     return KVCache(k=kv, v=kv, k_scale=sc if fp8 else None,
                    v_scale=sc if fp8 else None, idx=())
 

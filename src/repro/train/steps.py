@@ -253,8 +253,60 @@ def serve_weight_scales(cfg, params):
     return init_scales(model_defs(cfg), params, cfg.quant)[0]
 
 
+def prequantize_params(cfg, params):
+    """Quantize the WHOLE weight stack to fp8 payloads + scales at
+    server build time — the step beyond ``serve_weight_scales``: not
+    only the max-reductions but the fp8 casts themselves leave the
+    decode/prefill graphs, and weight HBM traffic drops to 1
+    byte/element for every quantized GEMM.
+
+    Works for every quantized recipe (``per_tensor``, ``per_group``,
+    ``moss`` — weights are per-tensor-quantized in all three; the
+    per-group/micro-group machinery applies to activations, which are
+    dynamic and stay quantized in-graph).  Per-(layer, expert) slices
+    get independent scales, matching what the scan-over-layers forward
+    quantizes one slice at a time, so serving outputs are *bitwise*
+    identical to the in-graph path (tests/test_serving.py).
+
+    Returns a ``PrequantParams`` (qweights, scales), or None in bf16
+    mode.  Never-quantized leaves (norms, routers, embeddings — and
+    the tied-embedding LM head, which shares the unquantized embedding
+    table) keep their raw arrays and in-graph behavior.
+    """
+    from repro.core.quant import PrequantParams, prequant_weight
+
+    qcfg = cfg.quant
+    if not qcfg.quantized:
+        return None
+    defs = model_defs(cfg)
+    sdims = _scale_dims(defs)
+    mask = quant_mask_tree(defs)
+    auto = qcfg.weight_scaling == "auto"
+    pred = init_scales(defs, params, qcfg)[0] if auto else None
+
+    def leaf(w, nd, m, s):
+        if not m:
+            return w, jnp.ones((), jnp.float32)
+        # "auto" recipes quantize against the predicted (build-time
+        # amax) scale like serve_weight_scales; jit/delayed recipes
+        # reduce amax over the (possibly bf16-cast) slice exactly as
+        # the in-graph quantizer would
+        return prequant_weight(w, nd, qcfg.fwd_format,
+                               scale=s if auto else None,
+                               cast_bf16=qcfg.weight_cast_bf16)
+
+    out = jax.tree.map(leaf, params, sdims, mask,
+                       pred if auto else sdims)
+    is_pair = lambda o: isinstance(o, tuple) and len(o) == 2
+    return PrequantParams(
+        qweights=jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
+        scales=jax.tree.map(lambda o: o[1], out, is_leaf=is_pair))
+
+
 def _wrap_serve(params, mask, scales):
-    """QT-wrap with cached build-time scales when available."""
+    """QT-wrap with cached build-time scales when available.  ``params``
+    may be the raw tree or ``PrequantParams.qweights`` (fp8 payloads) —
+    the linear layer keys off the leaf dtype."""
     if scales is None:
         return wrap_qt_nojit(params, mask)
     return wrap_qt(params, scales, mask)

@@ -1,5 +1,12 @@
 """Serving correctness: prefill+decode must reproduce teacher-forced
-logits (KV cache / recurrent state integrity), in bf16 for exactness."""
+logits (KV cache / recurrent state integrity), in bf16 for exactness —
+plus the pre-quantized serving contract (docs/serving.md): build-time
+fp8 weights are bitwise-identical to in-graph quantization, and the
+decode graph contains zero weight quantize / weight max-reduction ops.
+
+The teacher-forcing tests pin ``kv_cache_dtype="bf16"`` (they check
+cache plumbing exactness); the serving *default* is the fp8 cache,
+covered by the tolerance and default-resolution tests below."""
 
 import jax
 import jax.numpy as jnp
@@ -7,10 +14,20 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_config
-from repro.core.formats import BF16_CONFIG
+from repro.core.formats import (
+    BF16_CONFIG,
+    MOSS_CONFIG,
+    PER_GROUP_CONFIG,
+    PER_TENSOR_CONFIG,
+)
 from repro.models.layers import init_tree, quant_mask_tree, wrap_qt_nojit
 from repro.models.transformer import forward, model_defs
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.train.steps import (
+    make_decode_step,
+    make_prefill_step,
+    prequantize_params,
+    serve_weight_scales,
+)
 
 ARCHS = ["phi3-mini-3.8b", "h2o-danube-3-4b", "rwkv6-3b",
          "recurrentgemma-2b", "deepseek-v2-lite-16b", "stablelm-12b",
@@ -23,7 +40,8 @@ def test_decode_matches_teacher_forcing(arch):
     # capacity_factor high so MoE archs drop no tokens in train mode
     # (decode's dense-experts path is dropless by construction)
     cfg = get_config(arch, smoke=True).replace(quant=BF16_CONFIG,
-                                               capacity_factor=8.0)
+                                               capacity_factor=8.0,
+                                               kv_cache_dtype="bf16")
     defs = model_defs(cfg)
     params = init_tree(defs, jax.random.PRNGKey(0))
     B, S, EXTRA = 2, 48, 4
@@ -52,7 +70,7 @@ def test_swa_ring_cache_window_equivalence():
     """With a ring cache of size `window`, decoding past the window must
     match a fresh prefill truncated to the window."""
     cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
-        quant=BF16_CONFIG, window=32)
+        quant=BF16_CONFIG, window=32, kv_cache_dtype="bf16")
     defs = model_defs(cfg)
     params = init_tree(defs, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0,
@@ -108,6 +126,176 @@ def test_server_continuous_batching():
                                                dtype=np.int32),
                     max_new=6) for i in range(5)]
     srv = Server(cfg, params, batch_slots=2, max_len=32)
+    assert srv.prequant is not None          # quantized recipe -> prequant
+    assert srv.params is srv.prequant.qweights
     out = srv.run(reqs, log=lambda *a: None)
     assert all(len(r.out) == 6 for r in out)
     assert all(r.done for r in out)
+
+
+# ---------------------------------------------------------------------------
+# Pre-quantized serving stack (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = {"per_tensor": PER_TENSOR_CONFIG,
+               "per_group": PER_GROUP_CONFIG,
+               "moss": MOSS_CONFIG}
+
+
+def _serving_fixture(mode, arch="phi3-mini-3.8b"):
+    cfg = get_config(arch, smoke=True).replace(quant=QUANT_MODES[mode],
+                                               kv_cache_dtype="bf16")
+    defs = model_defs(cfg)
+    params = init_tree(defs, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_MODES))
+def test_prequant_bitwise_parity(mode):
+    """Pre-quantized prefill AND decode are bitwise identical to the
+    in-graph-quantize path: build-time scales/payloads reproduce the
+    exact fp8 bits the per-step quantizer would produce."""
+    cfg, params, toks = _serving_fixture(mode)
+    max_len = 16
+
+    scales = serve_weight_scales(cfg, params)
+    pre = jax.jit(make_prefill_step(cfg, max_len, scales=scales))
+    dec = jax.jit(make_decode_step(cfg, scales=scales))
+    la, ca = pre(params, {"tokens": toks})
+
+    pq = prequantize_params(cfg, params)
+    assert pq is not None
+    pre_q = jax.jit(make_prefill_step(cfg, max_len, scales=pq.scales))
+    dec_q = jax.jit(make_decode_step(cfg, scales=pq.scales))
+    lb, cb = pre_q(pq.qweights, {"tokens": toks})
+    assert jnp.array_equal(la, lb), float(jnp.abs(la - lb).max())
+
+    for i in range(3):
+        da, ca = dec(params, ca, toks[:, i:i + 1])
+        db, cb = dec_q(pq.qweights, cb, toks[:, i:i + 1])
+        assert jnp.array_equal(da, db), (i, float(jnp.abs(da - db).max()))
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_MODES))
+def test_prequant_moe_bitwise_parity(mode):
+    """Same contract on an MoE arch: per-expert stacked weights get
+    independent build-time scales (the vmapped decode experts and the
+    grouped prefill kernel both consume the fp8 stack)."""
+    cfg, params, toks = _serving_fixture(mode, arch="phi3.5-moe-42b-a6.6b")
+    scales = serve_weight_scales(cfg, params)
+    dec = jax.jit(make_decode_step(cfg, scales=scales))
+    pq = prequantize_params(cfg, params)
+    dec_q = jax.jit(make_decode_step(cfg, scales=pq.scales))
+    pre = jax.jit(make_prefill_step(cfg, 16, scales=scales))
+    _, ca = pre(params, {"tokens": toks})
+    pre_q = jax.jit(make_prefill_step(cfg, 16, scales=pq.scales))
+    _, cb = pre_q(pq.qweights, {"tokens": toks})
+    da, _ = dec(params, ca, toks[:, :1])
+    db, _ = dec_q(pq.qweights, cb, toks[:, :1])
+    assert jnp.array_equal(da, db), float(jnp.abs(da - db).max())
+
+
+@pytest.mark.parametrize("mode", ["per_group", "per_tensor", "moss"])
+def test_prequant_decode_graph_has_no_weight_quantize(mode):
+    """The acceptance contract: the pre-quantized decode jaxpr contains
+    ZERO weight-shaped fp8 casts (for every recipe) and, for the jit
+    recipes, strictly fewer max-reductions than the in-graph path (the
+    remaining reduce_max ops are activation amaxes + softmax)."""
+    from repro.core.introspect import (
+        count_fp8_casts,
+        count_primitive,
+        count_reduce_max_over,
+        weight_slice_sizes,
+    )
+
+    cfg, params, toks = _serving_fixture(mode)
+    scales = serve_weight_scales(cfg, params)
+    pre = jax.jit(make_prefill_step(cfg, 16, scales=scales))
+    _, caches = pre(params, {"tokens": toks})
+    tok1 = toks[:, :1]
+
+    jx_no = jax.make_jaxpr(make_decode_step(cfg, scales=scales))(
+        params, caches, tok1)
+    pq = prequantize_params(cfg, params)
+    jx_pq = jax.make_jaxpr(make_decode_step(cfg, scales=pq.scales))(
+        pq.qweights, caches, tok1)
+
+    wsizes = weight_slice_sizes(cfg)
+    assert count_fp8_casts(jx_no, wsizes) > 0      # in-graph: quantizes W
+    assert count_fp8_casts(jx_pq, wsizes) == 0     # prequant: never
+    assert count_reduce_max_over(jx_pq, wsizes) == 0   # no weight amax
+    n_no = count_primitive(jx_no, "reduce_max")
+    n_pq = count_primitive(jx_pq, "reduce_max")
+    if mode == "moss":
+        # moss serving already supplied predicted scales — no weight
+        # reductions to remove, only the casts (asserted above)
+        assert n_pq == n_no
+    else:
+        assert n_pq < n_no, (n_pq, n_no)
+
+
+def test_prequant_escape_hatch_and_bf16(monkeypatch):
+    """REPRO_SERVE_PREQUANT=0 restores in-graph quantization; bf16 mode
+    never pre-quantizes."""
+    from repro.core.runtime_flags import serve_prequant
+
+    monkeypatch.setenv("REPRO_SERVE_PREQUANT", "0")
+    assert not serve_prequant()
+    monkeypatch.delenv("REPRO_SERVE_PREQUANT")
+    assert serve_prequant()
+    cfg, params, _ = _serving_fixture("moss")
+    assert prequantize_params(cfg.replace(quant=BF16_CONFIG), params) is None
+
+
+def test_kv_cache_fp8_default_and_override(monkeypatch):
+    """fp8 KV cache is the serving default; REPRO_KV_CACHE overrides in
+    both directions at cache init."""
+    from repro.models import attention as A
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    assert cfg.kv_cache_dtype == "fp8"
+    c = A.init_cache(cfg, 2, 8)
+    assert c.k.dtype == jnp.float8_e4m3fn and c.k_scale is not None
+
+    monkeypatch.setenv("REPRO_KV_CACHE", "bf16")
+    c = A.init_cache(cfg, 2, 8)
+    assert c.k.dtype == jnp.bfloat16 and c.k_scale is None
+
+    monkeypatch.setenv("REPRO_KV_CACHE", "fp8")
+    c = A.init_cache(cfg.replace(kv_cache_dtype="bf16"), 2, 8)
+    assert c.k.dtype == jnp.float8_e4m3fn
+
+    monkeypatch.setenv("REPRO_KV_CACHE", "f16")
+    with pytest.raises(ValueError):
+        A.init_cache(cfg, 2, 8)
+
+
+def test_decode_fp8_kv_within_tolerance_of_bf16():
+    """End-to-end decode under the fp8 KV default stays in the same
+    ballpark as the bf16-cache decode (same prequant weights, only the
+    cache dtype differs).  The per-layer attention-output noise is <5%
+    (test_fp8_kv_cache_accuracy); through a random-init smoke model it
+    compounds, so this is a sanity bound, not a noise-floor claim."""
+    cfg8 = get_config("phi3-mini-3.8b", smoke=True)
+    cfgb = cfg8.replace(kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg8), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg8.vocab)
+    outs = {}
+    for name, cfg in [("fp8", cfg8), ("bf16", cfgb)]:
+        pq = prequantize_params(cfg, params)
+        pre = jax.jit(make_prefill_step(cfg, 16, scales=pq.scales))
+        dec = jax.jit(make_decode_step(cfg, scales=pq.scales))
+        _, caches = pre(pq.qweights, {"tokens": toks})
+        lo, _ = dec(pq.qweights, caches, toks[:, :1])
+        outs[name] = lo.astype(jnp.float32)
+    scale = float(jnp.abs(outs["bf16"]).max()) + 1e-6
+    rel = float(jnp.abs(outs["fp8"] - outs["bf16"]).max()) / scale
+    assert rel < 0.25, rel
+    # and the cheap cache really was used: same argmax ordering at the
+    # positions that matter for greedy sampling on this fixture
+    assert float(jnp.mean((jnp.argmax(outs["fp8"], -1)
+                           == jnp.argmax(outs["bf16"], -1))
+                          .astype(jnp.float32))) > 0.5

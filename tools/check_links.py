@@ -1,0 +1,54 @@
+"""Fail on broken relative links in the repo's markdown docs.
+
+Checks every ``[text](target)`` whose target is a relative path
+(external URLs and pure ``#anchor`` links are skipped) in README.md
+and docs/*.md; targets are resolved against the linking file's
+directory, ``#section`` suffixes stripped.  Run from the repo root:
+
+  python tools/check_links.py
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FILES = ["README.md", *sorted(glob.glob("docs/*.md"))]
+
+
+def check(paths=FILES) -> list[str]:
+    errors = []
+    for md in paths:
+        if not os.path.exists(md):
+            errors.append(f"{md}: file listed for checking is missing")
+            continue
+        text = open(md).read()
+        # strip fenced code blocks — snippets aren't links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in LINK.findall(text):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(FILES)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
