@@ -98,7 +98,8 @@ def inject(md_path: str, marker: str, table: str):
 
 # name prefixes worth tracking across PRs (exact-name rows first)
 TRAJECTORY_PREFIXES = ("moe_grouped_vs_vmapped", "dispatch_",
-                       "serve_prequant_", "table2_train_step_")
+                       "serve_prequant_", "table2_train_step_",
+                       "decode_attn_")
 
 BENCH_PATTERNS = ("experiments/bench/*/BENCH_*.json", "BENCH_*.json")
 
@@ -162,9 +163,9 @@ def write_trajectory(out_path: str = "docs/bench-trajectory.md") -> bool:
     body = (
         "# Benchmark trajectory\n\n"
         "Machine-readable rows from `benchmarks/run.py --smoke` "
-        "(`BENCH_moe.json`, `BENCH_serve.json`), one column per "
-        "snapshot under `experiments/bench/<label>/`.  Regenerate "
-        "with:\n\n"
+        "(`BENCH_moe.json`, `BENCH_serve.json`, `BENCH_decode.json`), "
+        "one column per snapshot under `experiments/bench/<label>/`.  "
+        "Regenerate with:\n\n"
         "```bash\nPYTHONPATH=src python benchmarks/run.py --smoke\n"
         "PYTHONPATH=src python -m benchmarks.report --trajectory\n"
         "```\n\n"

@@ -380,6 +380,86 @@ def bench_serve_prequant(arch: str = "phi3-mini-3.8b"):
             f"_weight_fp8_casts_{wc_pq}_vs_{wc_no}")
 
 
+# ---------------------------------------------------------------------------
+# Fused decode attention over the fp8 KV cache: decode step wall clock
+# for the kernel path (CPU default resolves to the ref oracle — same
+# math as the einsum path, so "no slower" holds structurally and in
+# wall clock) vs the REPRO_DECODE_ATTN=einsum fallback, plus the
+# jaxpr-level mechanism: cache-sized fp8 dequant upcasts and cache
+# dots removed from the decode graph (counted on the interpret-backend
+# trace, where the fused pallas_call is actually in the graph).
+# ---------------------------------------------------------------------------
+
+
+def bench_decode_attn(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.core.introspect import (count_dot_general_over,
+                                       count_fp8_dequant_upcasts,
+                                       count_primitive,
+                                       kv_cache_slice_sizes)
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.train.steps import (make_decode_step, make_prefill_step,
+                                   prequantize_params)
+
+    # B=2 keeps the cache slice size (B·KV·C·Dh = 8192) disjoint from
+    # every weight-slice size, so the counters see only the cache ops
+    cfg = get_config(arch, smoke=True)           # fp8 cache default
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab)
+    pq = prequantize_params(cfg, params)
+    pre = jax.jit(make_prefill_step(cfg, 32, scales=pq.scales))
+    _, caches = pre(pq.qweights, {"tokens": toks})
+    tok1 = toks[:, :1]
+    sizes = kv_cache_slice_sizes(cfg, 2, 32)
+
+    knobs = ("REPRO_DECODE_ATTN", "REPRO_KERNELS")
+    prior = {k: os.environ.get(k) for k in knobs}
+    us, counts = {}, {}
+    try:
+        for tag, env in (("kernel", {}),
+                         ("einsum", {"REPRO_DECODE_ATTN": "einsum"})):
+            for k in knobs:
+                os.environ.pop(k, None)
+            os.environ.update(env)
+            dec = jax.jit(make_decode_step(cfg, scales=pq.scales))
+            # min-of-3: on the CPU default both paths resolve to the
+            # same ref math, so wall-clock differences are pure noise
+            us[tag] = min(_timeit(lambda c: dec(pq.qweights, c,
+                                                tok1)[0],
+                                  caches, iters=10, warmup=2)
+                          for _ in range(3))
+            # structural counts from the interpret-backend trace —
+            # the linear GEMMs become pallas_calls on BOTH paths, so
+            # the deltas isolate the decode-attention mechanism
+            os.environ["REPRO_KERNELS"] = "interpret"
+            step = make_decode_step(cfg, scales=pq.scales)
+            jx = jax.make_jaxpr(step)(pq.qweights, caches, tok1)
+            counts[tag] = (count_fp8_dequant_upcasts(jx, sizes),
+                           count_dot_general_over(jx, sizes),
+                           count_primitive(jx, "pallas_call"))
+            if tag == "kernel":
+                dec_i = jax.jit(step)
+                us["interpret"] = _timeit(
+                    lambda c: dec_i(pq.qweights, c, tok1)[0], caches,
+                    iters=3, warmup=1)
+    finally:
+        for k, v in prior.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    up_k, dot_k, pc_k = counts["kernel"]
+    up_e, dot_e, pc_e = counts["einsum"]
+    row("decode_attn_fused_vs_einsum", us["kernel"],
+        f"einsum_us_{us['einsum']:.1f}"
+        f"_interpret_us_{us['interpret']:.1f}"
+        f"_cache_dequant_upcasts_{up_k}_vs_{up_e}"
+        f"_cache_dots_{dot_k}_vs_{dot_e}"
+        f"_fused_launches_{pc_k - pc_e}")
+
+
 def _write_json(path: str, rows=None) -> None:
     import json
 
@@ -410,11 +490,15 @@ def main(argv=None) -> None:
         bench_moe_grouped()
         bench_table2_throughput(B=4, S=64, iters=2)
         bench_serve_prequant()
+        bench_decode_attn()
         _write_json(args.json)
-        # serving rows also land in their own artifact (consumed by
-        # benchmarks/report.py --trajectory alongside BENCH_moe.json)
+        # serving / decode-attention rows also land in their own
+        # artifacts (consumed by benchmarks/report.py --trajectory
+        # alongside BENCH_moe.json)
         _write_json("BENCH_serve.json",
                     [r for r in _ROWS if r["name"].startswith("serve_")])
+        _write_json("BENCH_decode.json",
+                    [r for r in _ROWS if r["name"].startswith("decode_")])
         return
     bench_table1_autoscale()
     bench_table7_snr()
@@ -425,6 +509,7 @@ def main(argv=None) -> None:
     bench_table2_throughput()
     bench_table9_interval()
     bench_serve_prequant()
+    bench_decode_attn()
     if args.json:
         _write_json(args.json)
 

@@ -2,10 +2,13 @@
 
 The pre-quantized serving path (docs/serving.md) promises that the
 decode graph contains **zero weight quantize / weight max-reduction
-ops** — a structural property, checked directly on the jaxpr rather
-than inferred from wall clock (which on CPU measures fp8 emulation).
-Used by ``tests/test_serving.py`` and ``benchmarks/run.py``'s
-``BENCH_serve.json`` rows.
+ops**, and the fused decode-attention path
+(docs/decode-attention.md) that it contains **zero cache-sized
+dequantization upcasts or dots** — structural properties, checked
+directly on the jaxpr rather than inferred from wall clock (which on
+CPU measures fp8 emulation).  Used by ``tests/test_serving.py``,
+``tests/test_decode_attn.py`` and ``benchmarks/run.py``'s
+``BENCH_serve.json`` / ``BENCH_decode.json`` rows.
 """
 
 from __future__ import annotations
@@ -18,17 +21,23 @@ import jax.numpy as jnp
 from repro.compat.jaxapi import ClosedJaxpr, Jaxpr
 
 
-def iter_eqns(jaxpr) -> Iterator:
+def iter_eqns(jaxpr, skip_into: tuple[str, ...] = ()) -> Iterator:
     """Depth-first over every equation of a (Closed)Jaxpr, descending
     into sub-jaxprs (scan/while bodies, cond branches, pjit calls,
-    custom_vjp calls) via the eqn params."""
+    custom_vjp calls) via the eqn params.  Primitives named in
+    ``skip_into`` are yielded but NOT descended into — pass
+    ``("pallas_call",)`` to count XLA-level (HBM-visible) ops only,
+    excluding arithmetic that happens on VMEM blocks inside a kernel
+    body."""
     if isinstance(jaxpr, ClosedJaxpr):
         jaxpr = jaxpr.jaxpr
     for eqn in jaxpr.eqns:
         yield eqn
+        if eqn.primitive.name in skip_into:
+            continue
         for val in eqn.params.values():
             for sub in _sub_jaxprs(val):
-                yield from iter_eqns(sub)
+                yield from iter_eqns(sub, skip_into)
 
 
 def _sub_jaxprs(val):
@@ -88,6 +97,62 @@ def count_fp8_casts(jaxpr, sizes: set[int] | None = None) -> int:
         if sizes is None or op_size in sizes:
             n += 1
     return n
+
+
+def _op_size(var) -> int:
+    n = 1
+    for d in var.aval.shape:
+        n *= d
+    return n
+
+
+def count_fp8_dequant_upcasts(jaxpr, sizes: set[int]) -> int:
+    """convert_element_type equations FROM an fp8 dtype to a wider one
+    whose operand element count is in ``sizes`` — with the KV-cache
+    slice sizes (``kv_cache_slice_sizes``) this counts decode-attention
+    *dequantizations* of the cache payload: the scale-folding einsum
+    path upcasts the whole e4m3 K and V to feed the MXU (2 per layer),
+    the fused kernel reads the payload directly (0).  pallas_call
+    bodies are not descended into — in-kernel upcasts act on VMEM
+    blocks, not HBM-resident tensors."""
+    n = 0
+    for e in iter_eqns(jaxpr, skip_into=("pallas_call",)):
+        if e.primitive.name != "convert_element_type":
+            continue
+        if e.invars[0].aval.dtype not in _FP8_DTYPES:
+            continue
+        if e.params.get("new_dtype") in _FP8_DTYPES:
+            continue
+        if _op_size(e.invars[0]) in sizes:
+            n += 1
+    return n
+
+
+def count_dot_general_over(jaxpr, sizes: set[int]) -> int:
+    """dot_general equations with an operand whose element count is in
+    ``sizes`` — with the KV-cache slice sizes this counts the einsum
+    decode path's score and combine contractions against the cache
+    (2 per layer; the fused kernel leaves 0 at the XLA level — its
+    in-kernel dots act on blocks and are excluded via skip_into)."""
+    n = 0
+    for e in iter_eqns(jaxpr, skip_into=("pallas_call",)):
+        if e.primitive.name != "dot_general":
+            continue
+        if any(_op_size(v) in sizes for v in e.invars):
+            n += 1
+    return n
+
+
+def kv_cache_slice_sizes(cfg, batch: int, max_len: int) -> set[int]:
+    """Element count of ONE layer's K (or V) cache payload — the shape
+    the scan-over-layers decode body sees, i.e. the operand size of a
+    cache dequant upcast / cache dot in the decode jaxpr.  Callers must
+    pick test shapes where this doesn't collide with activation or
+    weight slice sizes (trivially true for the smoke configs)."""
+    from repro.models.attention import cache_len
+
+    c = cache_len(cfg, max_len)
+    return {batch * cfg.n_kv * c * cfg.head_dim}
 
 
 def weight_slice_sizes(cfg) -> set[int]:

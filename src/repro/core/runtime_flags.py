@@ -78,6 +78,30 @@ def serve_prequant() -> bool:
     return os.environ.get("REPRO_SERVE_PREQUANT", "1").strip() != "0"
 
 
+# Decode-attention path (see repro.models.attention._decode_attention
+# and repro.kernels.dispatch.decode_attention):
+#   "kernel" — route through the kernel dispatch: the fused Pallas
+#              decode kernel on pallas/interpret backends, the einsum
+#              oracle on the ref backend (the default)
+#   "einsum" — pin the scale-folding einsum path regardless of the
+#              kernel backend (A/B fallback; bitwise-identical to
+#              "kernel" under the ref backend)
+DECODE_ATTN_PATHS = ("kernel", "einsum")
+
+
+def decode_attn_path() -> str:
+    """Active decode-attention path: ``REPRO_DECODE_ATTN`` env
+    override, else the fused kernel through the dispatch layer."""
+    env = os.environ.get("REPRO_DECODE_ATTN", "").strip()
+    if env:
+        if env not in DECODE_ATTN_PATHS:
+            raise ValueError(
+                f"REPRO_DECODE_ATTN={env!r}: expected one of "
+                f"{DECODE_ATTN_PATHS}")
+        return env
+    return "kernel"
+
+
 # KV-cache storage dtype (see repro.models.attention.resolve_kv_cache_
 # dtype): per-arch configs default to "fp8" for the decode-bound
 # shapes; REPRO_KV_CACHE overrides every config in both directions.

@@ -9,6 +9,9 @@
 #   moe_gmm.py     grouped-expert ragged GEMM (MoE): fused quantize +
 #                  all expert GEMMs in one launch + the grouped dW
 #   mx_quant.py    standalone fused two-level quantizer
+#   decode_attn.py fused decode attention over the fp8/bf16 KV cache
+#                  (scale application + ring masking + softmax +
+#                  combine in one launch — the serving hot path)
 #   group_gemm.py  COAT per-group baseline (in-loop dequant)
 #   ref.py         pure-jnp oracles (semantics live in repro.core.quant)
 #   ops.py         thin public wrappers over dispatch

@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: fused decode attention over the (fp8 | bf16) KV
+cache — the serving hot path after weight pre-quantization.
+
+The einsum decode path dequantizes the fp8 cache *structurally*: XLA
+upcasts the whole e4m3 K and V payloads to bf16/f32 to feed the MXU
+(two full-cache ``convert_element_type`` ops per layer per step), folds
+the per-(token, kv-head) scales into the scores / combine weights with
+separate broadcast multiplies, and runs the masked softmax as its own
+fusion.  This kernel collapses all of it into ONE launch per
+(batch, kv-head) cell:
+
+  read e4m3 payload → upcast in VMEM → Q·Kᵀ → ×k_scale → ring-validity
+  mask → softmax → ×v_scale → ·V → out
+
+so the cache crosses HBM exactly once, at 1 byte/element, and nothing
+cache-sized is ever materialized in HBM (``core/introspect.py`` counts
+the removed upcasts/dots on the decode jaxpr).  A bf16 cache takes the
+same kernel with the scale operands elided — one entry point for both
+cache dtypes.
+
+Operand contract (see docs/decode-attention.md)
+-----------------------------------------------
+  q         (B, KV, G, Dh)  f32/bf16 — queries grouped by kv head
+                            (GQA: G = n_heads // n_kv; dispatch pads
+                            G up to the 8-row sublane tile)
+  k, v      (B, KV, C, Dh)  e4m3 or bf16 payloads — the cache layout
+                            itself (kv-head-major), read in place
+  k_scale,  (B, KV, C)      f32 per-(token, kv-head) scales; None for
+  v_scale                   the bf16 cache
+  n_valid   (1,)            int32 scalar-prefetch (SMEM): absolute
+                            positions written so far (cache ``idx``);
+                            must be ≥ 1 (decode attends after a write).
+                            Slot s is valid iff s < min(n_valid, C) —
+                            ring semantics: a wrapped cache (idx ≥ C)
+                            is fully valid, slot order is irrelevant
+                            to softmax
+  returns   (B, KV, G, Dh)  f32 UNCAST attention output
+
+Grid is (B, KV, C/bc).  With one C block (``bc == C``, the common
+serving case) the kernel computes the exact masked softmax in the same
+operation order as the einsum path — bitwise-identical on a bf16 cache
+(tests/test_decode_attn.py).  With several C blocks it switches to the
+online (flash) rescaling, which matches to f32 round-off.
+
+Alignment is CALLER-owned only for G (pad to ≥ 8 rows); C and Dh are
+taken as-is — the trailing partial C block is masked in-kernel (scores
+to NEG_INF, garbage V rows zeroed) so the cache is never padded or
+copied in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.jaxapi import pallas_tpu_compiler_params
+
+NEG_INF = -1e30
+_TINY = 1e-30
+
+# single-block VMEM budget: one (bc, Dh) K block + V block (fp8) plus
+# their f32 upcasts stay well under the ~16 MB/core VMEM at Dh=128
+MAX_SINGLE_BLOCK = 2048
+MULTI_BLOCK = 1024
+
+
+def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
+                        bc: int, c_true: int, sm_scale: float,
+                        quantized: bool, op_dtype):
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest[:3]
+        scratch = rest[3:]
+    else:
+        o_ref = rest[0]
+        scratch = rest[1:]
+    ci = pl.program_id(2)
+
+    # operands mirror runtime_flags.mm: bf16 values (fp8 casts are
+    # exact in bf16), f32 accumulation — bf16 on the MXU, f32 under the
+    # CPU interpreter, so interpret-vs-ref parity is bitwise
+    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (Gp, Dh)
+    k = k_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (bc, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                          # (Gp, bc)
+    if quantized:
+        # fold the per-(token, kv-head) K scale into the score — the
+        # payload itself is never dequantized in HBM
+        s = s * ks_ref[0, 0][None, :]
+
+    # ring-validity mask: slot < min(n_valid, C) covers the partial
+    # ring (idx < C), the fully-wrapped ring (all C slots valid) and
+    # the trailing partial block (slots ≥ C)
+    slot = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+    nv = jnp.minimum(nv_ref[0], c_true)
+    valid = slot < nv
+    s = jnp.where(valid, s, NEG_INF)
+
+    v = v_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (bc, Dh)
+
+    if n_c == 1:
+        # exact masked softmax, same operation order as the einsum
+        # reference (max → exp → sum → divide → ×v_scale → dot): on a
+        # bf16 cache the result is bitwise-identical to the ref path
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        w = p / jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            w = w * vs_ref[0, 0][None, :]
+        o_ref[0, 0] = jax.lax.dot_general(
+            w.astype(jnp.bfloat16).astype(op_dtype), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return
+
+    # multi-block: online (flash) softmax across C blocks.  The
+    # trailing partial block may hold garbage V rows (Pallas pads the
+    # edge); their weights are exactly 0 but 0·NaN would poison, so
+    # zero them explicitly.
+    v = jnp.where(valid.reshape(bc, 1), v, 0.0)
+    m_ref, l_ref, acc_ref = scratch
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m_prev = m_ref[:, :1]                                     # (Gp, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                    # (Gp, bc)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    if quantized:
+        # re-mask after the scale fold: a garbage-padded v_scale is
+        # NaN under the interpreter and 0 · NaN would poison the dot
+        p = jnp.where(valid, p * vs_ref[0, 0][None, :], 0.0)
+    pv = jax.lax.dot_general(p.astype(jnp.bfloat16).astype(op_dtype), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ci == n_c - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[:, :1], _TINY)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sm_scale", "bc", "interpret"))
+def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
+                       sm_scale: float, bc: int | None = None,
+                       interpret: bool = False):
+    """q: (B, KV, Gp, Dh) with Gp % 8 == 0 (dispatch pads); k/v:
+    (B, KV, C, Dh) e4m3|bf16 payloads; k_scale/v_scale: (B, KV, C) f32
+    or both None (bf16 cache); n_valid: (1,) int32 scalar-prefetch.
+    Returns (B, KV, Gp, Dh) f32.  ``bc`` picks the C block: defaults
+    to one block (exact softmax) up to MAX_SINGLE_BLOCK, else the
+    online multi-block path."""
+    from repro.core.runtime_flags import mm_operand_dtype
+
+    b, kvh, gp, dh = q.shape
+    c = k.shape[2]
+    assert k.shape == v.shape == (b, kvh, c, dh), (q.shape, k.shape)
+    assert gp % 8 == 0, f"G={gp} not padded to the 8-row sublane tile"
+    quantized = k_scale is not None
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (b, kvh, c)
+    if bc is None:
+        bc = c if c <= MAX_SINGLE_BLOCK else MULTI_BLOCK
+    bc = min(bc, c)
+    n_c = pl.cdiv(c, bc)
+    grid = (b, kvh, n_c)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gp, dh), lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, 1, bc, dh), lambda bi, ki, ci, nv: (bi, ki, ci, 0)),
+        pl.BlockSpec((1, 1, bc, dh), lambda bi, ki, ci, nv: (bi, ki, ci, 0)),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, bc), lambda bi, ki, ci, nv: (bi, ki, ci)),
+            pl.BlockSpec((1, 1, bc), lambda bi, ki, ci, nv: (bi, ki, ci)),
+        ]
+        args += [k_scale, v_scale]
+    scratch = [] if n_c == 1 else [
+        pltpu.VMEM((gp, 128), jnp.float32),      # running max (col 0)
+        pltpu.VMEM((gp, 128), jnp.float32),      # running sum (col 0)
+        pltpu.VMEM((gp, dh), jnp.float32),       # output accumulator
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, gp, dh),
+                               lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, n_c=n_c, bc=bc, c_true=c,
+                          sm_scale=sm_scale, quantized=quantized,
+                          op_dtype=mm_operand_dtype()),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dh), jnp.float32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(n_valid.astype(jnp.int32).reshape(1), *args)

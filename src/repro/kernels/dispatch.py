@@ -39,6 +39,7 @@ from repro.core import quant as Q
 from repro.core.quant import MxQ, PerGroupQ, PerTensorQ
 from repro.core.runtime_flags import KERNEL_BACKENDS, kernel_backend
 from . import ref
+from .decode_attn import decode_attn_pallas
 from .group_gemm import GROUP, group_gemm_pallas
 from .moe_gmm import moe_dw_gemm_pallas, moe_gmm_pallas
 from .mx_bwd import mx_dw_gemm_pallas
@@ -278,6 +279,45 @@ def moe_grouped_matmul_dw(xq: MxQ, gq: PerTensorQ,
             bko=_k_block(k), interpret=backend == "interpret")
     acc = acc[:, :k if out_rows is None else out_rows, :n]
     return (acc * (xq.s * gq.s)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving: fused decode attention over the (fp8 | bf16) KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
+                     sm_scale: float | None = None,
+                     backend: str | None = None) -> jax.Array:
+    """Single-step decode attention against the kv-head-major cache.
+
+    ``q`` is (B, KV, G, Dh) — queries grouped by kv head (GQA); ``k`` /
+    ``v`` are the cache payloads (B, KV, C, Dh) in e4m3 (with
+    per-(token, kv-head) f32 ``k_scale``/``v_scale`` (B, KV, C)) or
+    bf16 (scales None); ``n_valid`` is the cache ``idx`` scalar (≥ 1).
+    Returns (B, KV, G, Dh) f32 — the caller reshapes heads and casts.
+
+    The kernel path fuses scale application, ring-validity masking,
+    softmax and the value combine into one launch reading the payload
+    at 1 byte/element; the ref path is the scale-folding einsum oracle
+    (``kernels/ref.py``), bitwise-identical on a bf16 cache with one C
+    block (docs/decode-attention.md).  G is padded to the 8-row
+    sublane tile here and sliced back; C and Dh pass through unpadded
+    (the kernel masks the trailing partial block) so the cache is
+    never copied."""
+    backend = _resolve(backend)
+    b, kvh, g, dh = q.shape
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    if backend == "ref":
+        return ref.decode_attn_ref(q, k, v, k_scale, v_scale, n_valid,
+                                   sm_scale=sm_scale)
+    gp = _ceil_to(max(g, 8), 8)
+    out = decode_attn_pallas(
+        _pad_to(q, 2, gp), k, v, k_scale, v_scale,
+        jnp.asarray(n_valid, jnp.int32).reshape(1),
+        sm_scale=sm_scale, interpret=backend == "interpret")
+    return out[:, :, :g]
 
 
 # ---------------------------------------------------------------------------

@@ -68,6 +68,34 @@ def moe_dw_ref(qx, sexp, qg, capacity: int, fmt: str = "e4m3",
                          qg.reshape(e, capacity, n))
 
 
+def decode_attn_ref(q, k, v, k_scale, v_scale, n_valid, *,
+                    sm_scale: float) -> jax.Array:
+    """Einsum decode attention over the kv-head-major cache — the
+    semantic oracle for ``decode_attn_pallas`` AND the
+    ``REPRO_DECODE_ATTN=einsum`` escape hatch (same function, one
+    source of truth).
+
+    q: (B, KV, G, Dh); k/v: (B, KV, C, Dh) e4m3|bf16 payloads;
+    k_scale/v_scale: (B, KV, C) f32 or both None; n_valid: () int32.
+    Per-(token, kv-head) scales fold into the score (K) and the
+    combine weight (V) instead of dequantizing the payload; slot
+    validity is ``slot < min(n_valid, C)`` (ring: a wrapped cache is
+    fully valid).  Returns (B, KV, G, Dh) f32."""
+    from repro.core.runtime_flags import einsum
+
+    c = k.shape[2]
+    scores = einsum("bkgd,bktd->bkgt", q, k,
+                    out_dtype=jnp.float32) * sm_scale
+    if k_scale is not None:
+        scores = scores * k_scale[:, :, None, :]
+    valid = jnp.arange(c) < jnp.minimum(n_valid, c)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        w = w * v_scale[:, :, None, :]
+    return einsum("bkgt,bktd->bkgd", w, v, out_dtype=jnp.float32)
+
+
 def mx_quant_ref(x, s_global, fmt: str = "e4m3"):
     """Two-level quantize given a precomputed global scale."""
     q = Q.quant_mx(x, micro_group=32, fmt=fmt, global_scale=s_global)

@@ -11,9 +11,14 @@ re-reducing ``max|W|`` — inside every prefill/decode step would be
 pure waste.  The decode graph therefore contains zero weight quantize
 or max-reduction ops and reads 1 byte/element of weight HBM traffic
 (the memory-bound decode roofline win); the KV cache is fp8 by default
-for the same reason (docs/serving.md).  ``REPRO_SERVE_PREQUANT=0``
-falls back to cached-scale in-graph quantization; ``REPRO_KV_CACHE=
-bf16`` restores the bf16 cache.
+for the same reason (docs/serving.md), and the decode step consumes it
+through the fused Pallas decode-attention kernel — ring masking, scale
+application, softmax and the value combine in one launch, zero
+cache-sized dequant ops in the decode jaxpr
+(docs/decode-attention.md).  ``REPRO_SERVE_PREQUANT=0`` falls back to
+cached-scale in-graph quantization; ``REPRO_KV_CACHE=bf16`` restores
+the bf16 cache; ``REPRO_DECODE_ATTN=einsum`` pins the scale-folding
+einsum decode attention.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \

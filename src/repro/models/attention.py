@@ -3,7 +3,11 @@ flash-style chunked softmax (never materializes S×S), and a KV cache
 with ring-buffer semantics for window attention.
 
 All projections are MOSS-quantized linears.  Scores/softmax run in f32
-(the paper keeps non-GEMM ops in high precision).
+(the paper keeps non-GEMM ops in high precision).  Decode attention
+routes through ``repro.kernels.dispatch.decode_attention`` — the fused
+Pallas kernel over the fp8/bf16 cache by default, the scale-folding
+einsum path under ``REPRO_DECODE_ATTN=einsum``
+(docs/decode-attention.md).
 """
 
 from __future__ import annotations
@@ -15,28 +19,57 @@ import jax.numpy as jnp
 
 from repro.core.formats import QuantConfig
 from repro.core.linear import dense_general
+from repro.core.runtime_flags import decode_attn_path
 from repro.distributed.sharding import shard
-from repro.core.runtime_flags import einsum as rf_einsum
+from repro.kernels import dispatch
 from .layers import PDef, apply_rope
 from ._attn_core import chunked_attention, _window
 
-NEG_INF = -1e30
-
 
 class KVCache(NamedTuple):
-    """KV cache; optionally fp8 (E4M3 payload + per-(token, kv-head)
-    f32 scales — halves the decode-step HBM read, the memory-roofline
-    term that dominates decode cells)."""
+    """Decode KV cache, kv-head-major.
 
-    k: jax.Array      # (B, C, KV, Dh) — C = min(max_len, window) for swa
+    Layout (one layer, pre-stacking; C = ``cache_len`` = min(max_len,
+    window)):
+
+      k, v      (B, KV, C, Dh)  payloads — e4m3 (fp8 cache, the
+                                serving default) or bf16.  kv-head
+                                major so the decode kernel reads
+                                contiguous (C, Dh) tiles per
+                                (batch, kv-head) with no transpose
+      k_scale,  (B, KV, C)      f32 per-(token, kv-head) scales when
+      v_scale                   fp8, else None — one scale per written
+                                position's head vector (amax over Dh)
+      idx       ()              int32: absolute position of the next
+                                write (NOT mod C) — doubles as the
+                                valid-token count: slot s holds a live
+                                position iff s < min(idx, C)
+
+    The fp8 layout halves the decode-step HBM read (the
+    memory-roofline term that dominates decode cells —
+    benchmarks/roofline.py); the scales add 4/Dh bytes/element.
+    Scale convention: payload · scale reconstructs the stored vector;
+    decode attention never materializes that product — the K scale
+    folds into the score and the V scale into the combine weight
+    (einsum path), or both fold inside the kernel (fused path).
+
+    Ring append contract (``_cache_write``): position p lives in slot
+    p % C; appends of S ≥ C positions keep the last C (prefill of a
+    window cache), shorter appends write ``[idx % C, idx % C + S)``
+    contiguously — the serving engine never wraps a multi-token append
+    mid-stream (prefill starts at idx=0; decode appends S=1)."""
+
+    k: jax.Array
     v: jax.Array
-    k_scale: jax.Array | None   # (B, C, KV) when fp8, else None
+    k_scale: jax.Array | None
     v_scale: jax.Array | None
-    idx: jax.Array    # i32 scalar: absolute position of next write
+    idx: jax.Array
 
 
 def _quant_kv(x):
-    """(B, S, KV, Dh) -> (e4m3 payload, per-(B,S,KV) f32 scale)."""
+    """(B, KV, S, Dh) -> (e4m3 payload, per-(B, KV, S) f32 scale).
+    One amax over each position's head vector; TINY-clamped so zero
+    vectors quantize to q=0 with a finite scale."""
     from repro.core.formats import E4M3_MAX, TINY, cast_fp8
 
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -82,7 +115,7 @@ def resolve_kv_cache_dtype(cfg) -> str:
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
     c = cache_len(cfg, max_len)
-    shape = (batch, c, cfg.n_kv, cfg.head_dim)
+    shape = (batch, cfg.n_kv, c, cfg.head_dim)
     if resolve_kv_cache_dtype(cfg) == "fp8":
         return KVCache(k=jnp.zeros(shape, jnp.float8_e4m3fn),
                        v=jnp.zeros(shape, jnp.float8_e4m3fn),
@@ -98,8 +131,8 @@ def cache_logical(cfg) -> KVCache:
     """Logical sharding axes for ONE layer's cache (pre-stacking).
     The seq dim carries the model axis when kv_heads can't (resolve_spec
     drops whichever doesn't divide)."""
-    kv = ("batch", "kv_seq", "kv_heads", None)
-    sc = ("batch", "kv_seq", "kv_heads")
+    kv = ("batch", "kv_heads", "kv_seq", None)
+    sc = ("batch", "kv_heads", "kv_seq")
     fp8 = resolve_kv_cache_dtype(cfg) == "fp8"
     return KVCache(k=kv, v=kv, k_scale=sc if fp8 else None,
                    v_scale=sc if fp8 else None, idx=())
@@ -130,53 +163,44 @@ def _project_qkv(cfg, p, x, positions, qcfg: QuantConfig):
 def _decode_attention(cfg, q, cache: KVCache, n_valid):
     """Single-step attention against the cache.
 
-    q: (B,1,H,Dh).  Grouped einsum (no kv-repeat): scores (B,KV,G,T).
-    """
+    q: (B,1,H,Dh).  GQA grouping: head h belongs to kv head h // G
+    (G = H // KV), so the (B, KV, G, Dh) regroup is a free reshape.
+    Routed through ``dispatch.decode_attention`` — fused Pallas kernel
+    on the pallas/interpret backends, the scale-folding einsum oracle
+    on ref; ``REPRO_DECODE_ATTN=einsum`` pins the einsum path."""
     b, _, h, dh = q.shape
-    kvh = cache.k.shape[2]
+    kvh = cache.k.shape[1]
     g = h // kvh
-    t = cache.k.shape[1]
-    scale = dh ** -0.5
     qg = q.reshape(b, kvh, g, dh)
-    if cache.k_scale is not None:
-        # fp8 cache: fold the per-(token, kv-head) scale into the score
-        # (k) and the combine weight (v) instead of dequantizing the
-        # payload — the HBM read stays 1 byte/element.
-        scores = rf_einsum("bkgd,btkd->bkgt", qg, cache.k,
-                           out_dtype=jnp.float32) * scale
-        scores = scores * cache.k_scale.transpose(0, 2, 1)[:, :, None, :]
-    else:
-        scores = rf_einsum("bkgd,btkd->bkgt", qg, cache.k,
-                           out_dtype=jnp.float32) * scale
-    slot = jnp.arange(t)
-    valid = slot < jnp.minimum(n_valid, t)               # ring: all valid
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1)
-    if cache.v_scale is not None:
-        wv = w * cache.v_scale.transpose(0, 2, 1)[:, :, None, :]
-        out = rf_einsum("bkgt,btkd->bkgd", wv, cache.v,
-                        out_dtype=jnp.float32)
-    else:
-        out = rf_einsum("bkgt,btkd->bkgd", w, cache.v,
-                        out_dtype=jnp.float32)
+    backend = "ref" if decode_attn_path() == "einsum" else None
+    out = dispatch.decode_attention(
+        qg, cache.k, cache.v, cache.k_scale, cache.v_scale, n_valid,
+        sm_scale=dh ** -0.5, backend=backend)
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
 def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
     """Append S_new positions (prefill: many; decode: 1) with ring
-    semantics for window attention; fp8 caches quantize on write."""
+    semantics for window attention; fp8 caches quantize on write.
+
+    ``k_new``/``v_new`` arrive in projection layout (B, S, KV, Dh) and
+    are transposed once to the cache's kv-head-major layout — a
+    prompt-sized copy at prefill, a single position at decode; the
+    cache itself is only ever written in place."""
     fp8 = cache.k_scale is not None
+    k_new = k_new.transpose(0, 2, 1, 3)                   # (B,KV,S,Dh)
+    v_new = v_new.transpose(0, 2, 1, 3)
     if fp8:
         k_new, ks_new = _quant_kv(k_new)
         v_new, vs_new = _quant_kv(v_new)
-    c = cache.k.shape[1]
-    s_new = k_new.shape[1]
+    c = cache.k.shape[2]
+    s_new = k_new.shape[2]
     if s_new >= c:
         # keep the last C positions (prefill of a window cache);
         # ring layout: position p lives in slot p % C
         start = (cache.idx + s_new - c) % c
-        roll = lambda x: jnp.roll(x[:, -c:].astype(x.dtype), start,
-                                  axis=1)
+        roll = lambda x: jnp.roll(x[:, :, -c:].astype(x.dtype), start,
+                                  axis=2)
         return KVCache(roll(k_new).astype(cache.k.dtype),
                        roll(v_new).astype(cache.v.dtype),
                        roll(ks_new) if fp8 else None,
@@ -191,7 +215,7 @@ def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
     zero = jnp.zeros((), jnp.int32)
 
     def dus(buf, upd):
-        idxs = (zero, start) + (zero,) * (buf.ndim - 2)
+        idxs = (zero, zero, start) + (zero,) * (buf.ndim - 3)
         return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype),
                                             idxs)
 
@@ -220,7 +244,7 @@ def attention(cfg, p, x, positions, qcfg: QuantConfig,
         new_cache = None
         if mode == "prefill":
             new_cache = _cache_write(
-                cfg, init_cache(cfg, x.shape[0], cache.k.shape[1]
+                cfg, init_cache(cfg, x.shape[0], cache.k.shape[2]
                                 if cache is not None else x.shape[1]),
                 k, v)
     out = shard(out, "batch", None, "heads", None)

@@ -1,0 +1,244 @@
+"""Fused decode-attention contract (docs/decode-attention.md):
+
+- ref-vs-interpret parity of ``dispatch.decode_attention`` on fp8 AND
+  bf16 caches across the ring states (partial, exactly-full, wrapped
+  window) and GQA grouping;
+- the multi-block online-softmax path against the exact oracle;
+- bitwise kernel-vs-einsum equality on the bf16 cache (the einsum
+  path IS the ref oracle — one source of truth);
+- the acceptance assertion: the fp8-cache decode jaxpr on the kernel
+  path contains ZERO cache-sized dequant upcasts / dots (the
+  scale-folding einsums the fused kernel removes);
+- the ``REPRO_DECODE_ATTN`` escape hatch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels import dispatch
+from repro.kernels.decode_attn import decode_attn_pallas
+from repro.models import attention as A
+from repro.models.layers import init_tree
+from repro.models.transformer import model_defs
+from repro.train.steps import (
+    make_decode_step,
+    make_prefill_step,
+    prequantize_params,
+)
+
+
+def _build_cache(cfg, batch, max_len, n_written, seed=0):
+    """Write ``n_written`` positions through the real append path (ring
+    roll for n_written >= C, contiguous write otherwise)."""
+    k = jax.random.normal(jax.random.PRNGKey(seed),
+                          (batch, n_written, cfg.n_kv, cfg.head_dim))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (batch, n_written, cfg.n_kv, cfg.head_dim))
+    return A._cache_write(cfg, A.init_cache(cfg, batch, max_len), k, v)
+
+
+def _q(cfg, batch, seed=2, dtype=jnp.bfloat16):
+    g = cfg.n_heads // cfg.n_kv
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (batch, cfg.n_kv, g, cfg.head_dim), dtype)
+
+
+# ring states: (arch, max_len, n_written) — h2o smoke is swa with
+# window 64 (GQA g=2), phi3 smoke is full attention
+RING_CASES = [
+    ("phi3-mini-3.8b", 51, 48),     # partial ring (n_valid < C)
+    ("h2o-danube-3-4b", 96, 48),    # partial window cache (C = 64)
+    ("h2o-danube-3-4b", 96, 64),    # exactly full ring
+    ("h2o-danube-3-4b", 96, 80),    # wrapped window (roll path, idx > C)
+]
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+@pytest.mark.parametrize("arch,max_len,n_written", RING_CASES)
+def test_ref_vs_interpret_parity(arch, max_len, n_written, kv_dtype):
+    cfg = get_config(arch, smoke=True).replace(kv_cache_dtype=kv_dtype)
+    cache = _build_cache(cfg, 2, max_len, n_written)
+    q = _q(cfg, 2)
+    nv = jnp.int32(n_written)
+    outs = {b: dispatch.decode_attention(
+        q, cache.k, cache.v, cache.k_scale, cache.v_scale, nv,
+        backend=b) for b in ("ref", "interpret")}
+    # single C block → the kernel replays the exact softmax in the
+    # reference operation order: bitwise across backends
+    assert jnp.array_equal(outs["ref"], outs["interpret"]), \
+        float(jnp.abs(outs["ref"] - outs["interpret"]).max())
+    assert outs["ref"].dtype == jnp.float32
+
+
+def test_gqa_head_grouping_semantics():
+    """Against an independent f64 oracle (repeat kv heads, plain
+    softmax) — validates the grouping convention itself, not just
+    backend agreement: query head h attends through kv head h // G."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
+        kv_cache_dtype="bf16")
+    b, kvh, dh = 2, cfg.n_kv, cfg.head_dim
+    g = cfg.n_heads // kvh
+    cache = _build_cache(cfg, b, 40, 24)
+    q = _q(cfg, b)
+    out = dispatch.decode_attention(q, cache.k, cache.v, None, None,
+                                    jnp.int32(24), backend="ref")
+    kf = np.asarray(cache.k, np.float64)[:, :, :24]   # (B,KV,24,Dh)
+    vf = np.asarray(cache.v, np.float64)[:, :, :24]
+    qf = np.asarray(q, np.float64)
+    for bi in range(b):
+        for h in range(cfg.n_heads):
+            kv = h // g
+            s = (qf[bi, kv, h % g] @ kf[bi, kv].T) * dh ** -0.5
+            w = np.exp(s - s.max())
+            w /= w.sum()
+            expect = w @ vf[bi, kv]
+            got = np.asarray(out, np.float64)[bi, kv, h % g]
+            np.testing.assert_allclose(got, expect, atol=2e-2)
+
+
+def test_multi_block_online_softmax():
+    """C split across several blocks (with a ragged trailing block)
+    switches the kernel to the online rescaling — matching the exact
+    oracle at the bf16 combine-weight noise floor (both paths round
+    the softmax weights to bf16 for the MXU per the ``mm`` operand
+    convention; online rounds the unnormalized per-block ``p``, the
+    oracle the final ``w``, so agreement is ~bf16-eps, not bitwise)."""
+    b, kvh, g, c, dh = 2, 2, 8, 160, 32
+    kf = jax.random.normal(jax.random.PRNGKey(0), (b, kvh, c, dh))
+    vf = jax.random.normal(jax.random.PRNGKey(1), (b, kvh, c, dh))
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, kvh, g, dh),
+                          jnp.bfloat16)
+    nv = jnp.int32(150)                       # masked tail inside a block
+    for quantized in (True, False):
+        if quantized:
+            k, ks = A._quant_kv(kf)
+            v, vs = A._quant_kv(vf)
+        else:
+            k, v = kf.astype(jnp.bfloat16), vf.astype(jnp.bfloat16)
+            ks = vs = None
+        ref = dispatch.decode_attention(q, k, v, ks, vs, nv,
+                                        backend="ref")
+        multi = decode_attn_pallas(q, k, v, ks, vs, nv.reshape(1),
+                                   sm_scale=dh ** -0.5, bc=64,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(multi), np.asarray(ref),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "fp8"])
+def test_kernel_vs_einsum_through_attention(monkeypatch, kv_dtype):
+    """End to end through ``_decode_attention``: the kernel path
+    (REPRO_KERNELS=interpret) against the REPRO_DECODE_ATTN=einsum
+    escape hatch — bitwise on the bf16 cache (the ISSUE contract; the
+    fp8 cache happens to match bitwise too on this fixture)."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
+        kv_cache_dtype=kv_dtype)
+    cache = _build_cache(cfg, 2, 96, 70)
+    q = jax.random.normal(jax.random.PRNGKey(3),
+                          (2, 1, cfg.n_heads, cfg.head_dim),
+                          jnp.bfloat16)
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    out_k = A._decode_attention(cfg, q, cache, jnp.int32(70))
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    out_e = A._decode_attention(cfg, q, cache, jnp.int32(70))
+    if kv_dtype == "bf16":
+        assert jnp.array_equal(out_k, out_e)
+    else:
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_e, np.float32),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_fp8_decode_jaxpr_has_no_dequant_einsums(monkeypatch):
+    """The acceptance contract: on the kernel path the fp8-cache decode
+    jaxpr contains ZERO cache-sized fp8 dequant upcasts and ZERO
+    cache-sized dot_generals — the scale-folding einsum path shows
+    both.  (REPRO_KERNELS=interpret so the kernel path traces on CPU;
+    the pallas_call interior is excluded — it reads the e4m3 payload.)"""
+    from repro.core.introspect import (
+        count_dot_general_over,
+        count_fp8_dequant_upcasts,
+        count_primitive,
+        kv_cache_slice_sizes,
+    )
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    assert cfg.kv_cache_dtype == "fp8"
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab)
+    pq = prequantize_params(cfg, params)
+    pre = jax.jit(make_prefill_step(cfg, 16, scales=pq.scales))
+    _, caches = pre(pq.qweights, {"tokens": toks})
+    sizes = kv_cache_slice_sizes(cfg, 2, 16)
+
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    jx_k = jax.make_jaxpr(make_decode_step(cfg, scales=pq.scales))(
+        pq.qweights, caches, toks[:, :1])
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    jx_e = jax.make_jaxpr(make_decode_step(cfg, scales=pq.scales))(
+        pq.qweights, caches, toks[:, :1])
+
+    assert count_fp8_dequant_upcasts(jx_e, sizes) > 0    # einsum: dequant
+    assert count_dot_general_over(jx_e, sizes) > 0       # cache-sized dots
+    assert count_fp8_dequant_upcasts(jx_k, sizes) == 0   # kernel: never
+    assert count_dot_general_over(jx_k, sizes) == 0
+    # under interpret the linear GEMMs are pallas_calls on BOTH paths;
+    # the kernel path adds the fused decode-attention launch on top
+    assert count_primitive(jx_k, "pallas_call") > \
+        count_primitive(jx_e, "pallas_call")
+
+    # and the two graphs still agree numerically
+    monkeypatch.delenv("REPRO_DECODE_ATTN")
+    dec_k = jax.jit(make_decode_step(cfg, scales=pq.scales))
+    lo_k, _ = dec_k(pq.qweights, caches, toks[:, :1])
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    dec_e = jax.jit(make_decode_step(cfg, scales=pq.scales))
+    lo_e, _ = dec_e(pq.qweights, caches, toks[:, :1])
+    np.testing.assert_allclose(np.asarray(lo_k, np.float32),
+                               np.asarray(lo_e, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attn_flag_validation(monkeypatch):
+    from repro.core.runtime_flags import decode_attn_path
+
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    assert decode_attn_path() == "kernel"
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    assert decode_attn_path() == "einsum"
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "fused")
+    with pytest.raises(ValueError):
+        decode_attn_path()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "h2o-danube-3-4b",
+                                  "recurrentgemma-2b", "stablelm-12b",
+                                  "phi3.5-moe-42b-a6.6b", "minitron-8b"])
+def test_kernel_path_decode_all_cache_archs(monkeypatch, arch):
+    """Every cache-bearing arch decodes through the fused kernel
+    (interpret backend) and agrees with the einsum path — GQA/MQA
+    grouping, window/ring semantics and the MoE/hybrid assemblies all
+    route through the same dispatch entry."""
+    cfg = get_config(arch, smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab)
+    pq = prequantize_params(cfg, params)
+    pre = jax.jit(make_prefill_step(cfg, 16, scales=pq.scales))
+    _, caches = pre(pq.qweights, {"tokens": toks})
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    lo_k, _ = jax.jit(make_decode_step(cfg, scales=pq.scales))(
+        pq.qweights, caches, toks[:, :1])
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    lo_e, _ = jax.jit(make_decode_step(cfg, scales=pq.scales))(
+        pq.qweights, caches, toks[:, :1])
+    scale = float(jnp.abs(lo_e).max()) + 1e-6
+    assert float(jnp.abs(lo_k - lo_e).max()) / scale < 1e-3

@@ -1,9 +1,16 @@
-"""Fail on broken relative links in the repo's markdown docs.
+"""Fail on broken relative links — and broken anchors — in the repo's
+markdown docs.
 
-Checks every ``[text](target)`` whose target is a relative path
-(external URLs and pure ``#anchor`` links are skipped) in README.md
-and docs/*.md; targets are resolved against the linking file's
-directory, ``#section`` suffixes stripped.  Run from the repo root:
+Checks every ``[text](target)`` in README.md and docs/*.md:
+
+- relative-path targets must exist on disk (external URLs and
+  ``mailto:`` are skipped), resolved against the linking file's
+  directory;
+- ``#section`` suffixes (and pure ``#anchor`` links) must match a
+  heading in the target file, using GitHub's slug rules (lowercase,
+  punctuation stripped, spaces → hyphens).
+
+Run from the repo root:
 
   python tools/check_links.py
 """
@@ -16,28 +23,53 @@ import re
 import sys
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
 FILES = ["README.md", *sorted(glob.glob("docs/*.md"))]
+
+
+def _strip_code(text: str) -> str:
+    # fenced code blocks aren't links or headings
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _slug(heading: str) -> str:
+    """GitHub anchor slug: inline code/formatting dropped, lowercase,
+    keep word chars/spaces/hyphens, spaces → hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str, cache: dict[str, set]) -> set[str]:
+    if path not in cache:
+        text = _strip_code(open(path).read())
+        cache[path] = {_slug(m) for m in HEADING.findall(text)}
+    return cache[path]
 
 
 def check(paths=FILES) -> list[str]:
     errors = []
+    anchor_cache: dict[str, set] = {}
     for md in paths:
         if not os.path.exists(md):
             errors.append(f"{md}: file listed for checking is missing")
             continue
-        text = open(md).read()
-        # strip fenced code blocks — snippets aren't links
-        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        text = _strip_code(open(md).read())
         for target in LINK.findall(text):
-            if "://" in target or target.startswith(("#", "mailto:")):
+            if "://" in target or target.startswith("mailto:"):
                 continue
-            rel = target.split("#", 1)[0]
-            if not rel:
-                continue
-            resolved = os.path.normpath(
-                os.path.join(os.path.dirname(md), rel))
+            rel, _, frag = target.partition("#")
+            resolved = (os.path.normpath(os.path.join(
+                os.path.dirname(md), rel)) if rel else md)
             if not os.path.exists(resolved):
                 errors.append(f"{md}: broken link -> {target}")
+                continue
+            if frag and resolved.endswith(".md"):
+                # compare the fragment verbatim: GitHub ids are
+                # lowercase slugs, so an uppercase fragment is broken
+                # even when it lowercases to a real heading
+                if frag not in _anchors(resolved, anchor_cache):
+                    errors.append(f"{md}: broken anchor -> {target}")
     return errors
 
 
