@@ -460,6 +460,70 @@ def bench_decode_attn(arch: str = "phi3-mini-3.8b"):
         f"_fused_launches_{pc_k - pc_e}")
 
 
+# ---------------------------------------------------------------------------
+# Paged continuous batching: tok/s + mean TTFT on a mixed-length
+# request trace, paged engine vs legacy contiguous-ring Server.  CPU
+# wall clock is emulation; the structural columns (decode batch sizes,
+# page-pool accounting, engine steps) carry the mechanism — the paged
+# engine retires finished slots from the decode batch and admits
+# mixed-depth requests without re-prefill (docs/continuous-batching.md).
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_continuous(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.launch.serve import Server
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.serving import Engine, Request
+
+    cfg = get_config(arch, smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = [8, 24, 12, 30, 16, 20, 10, 28]       # mixed-length trace
+    max_new, slots, max_len = 8, 4, 48
+
+    def trace(rid0):
+        return [Request(rid=rid0 + i,
+                        prompt=rng.integers(0, cfg.vocab, size=n,
+                                            dtype=np.int32),
+                        max_new=max_new)
+                for i, n in enumerate(lens)]
+
+    stats = {}
+    for tag in ("paged", "legacy"):
+        # the warmup pass compiles prefill buckets + per-row-count
+        # decode steps ON THE SAME INSTANCE (jit caches live on the
+        # built step callables), so the timed pass measures steady
+        # state
+        if tag == "paged":
+            drv = Engine(cfg, params, slots, max_len=max_len)
+            serve = lambda rr: drv.run(rr, log=None)
+        else:
+            drv = Server(cfg, params, slots, max_len=max_len)
+            serve = lambda rr: drv.run(rr, log=lambda *a: None)
+        for run in ("warmup", "timed"):
+            reqs = trace(0 if run == "warmup" else 100)
+            t0 = time.perf_counter()
+            serve(reqs)
+            dt = time.perf_counter() - t0
+        if tag == "paged":
+            # metrics over the timed trace only (warmup paid compiles)
+            ttft = float(np.mean([r.ttft for r in reqs]))
+            extra = (f"_mean_ttft_ms_{1e3 * ttft:.0f}"
+                     f"_pages_{drv.kv.allocator.num_pages}")
+        else:
+            extra = ""
+        toks = sum(len(r.out) for r in reqs)
+        stats[tag] = (dt / toks * 1e6, toks / dt, extra)
+    us_p, tps_p, extra_p = stats["paged"]
+    us_l, tps_l, _ = stats["legacy"]
+    row("serve_continuous_paged_vs_legacy", us_p,
+        f"tok_s_{tps_p:.1f}_legacy_tok_s_{tps_l:.1f}"
+        f"_legacy_us_per_tok_{us_l:.1f}{extra_p}"
+        f"_trace_{len(lens)}reqs_mixed_{min(lens)}to{max(lens)}")
+
+
 def _write_json(path: str, rows=None) -> None:
     import json
 
@@ -491,6 +555,7 @@ def main(argv=None) -> None:
         bench_table2_throughput(B=4, S=64, iters=2)
         bench_serve_prequant()
         bench_decode_attn()
+        bench_serve_continuous()
         _write_json(args.json)
         # serving / decode-attention rows also land in their own
         # artifacts (consumed by benchmarks/report.py --trajectory
@@ -510,6 +575,7 @@ def main(argv=None) -> None:
     bench_table9_interval()
     bench_serve_prequant()
     bench_decode_attn()
+    bench_serve_continuous()
     if args.json:
         _write_json(args.json)
 

@@ -1,7 +1,8 @@
-"""Batched serving example: continuous batching over a request queue
-with prefill + decode on a MOSS-quantized model — the fp8-at-rest
-serving defaults: build-time pre-quantized weights (PrequantParams)
-and the fp8 KV cache (docs/serving.md).
+"""Batched serving example: the paged continuous-batching engine over
+a request queue with mixed prompt lengths — the fp8-at-rest serving
+defaults: build-time pre-quantized weights (PrequantParams), the fp8
+KV cache, the fused decode-attention kernel, and per-slot depths with
+block-table page accounting (docs/continuous-batching.md).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -15,9 +16,9 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.launch.serve import Request, Server
 from repro.models.layers import init_tree
 from repro.models.transformer import model_defs
+from repro.serving import Engine, Request
 
 
 def main():
@@ -25,26 +26,37 @@ def main():
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
+    # mixed prompt lengths: slots at different depths coexist via the
+    # per-slot length vector (no re-prefill around a shared ring idx)
     requests = [
         Request(rid=i,
-                prompt=rng.integers(0, cfg.vocab, size=24,
+                prompt=rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(8, 28)),
                                     dtype=np.int32),
                 max_new=12)
         for i in range(10)
     ]
-    print(f"{len(requests)} requests, 4 decode slots "
-          f"(continuous batching)")
-    server = Server(cfg, params, batch_slots=4, max_len=64)
+    print(f"{len(requests)} requests (prompt lengths "
+          f"{[r.prompt_len for r in requests]}), 4 decode slots "
+          f"(paged continuous batching)")
+    engine = Engine(cfg, params, num_slots=4, max_len=64)
     from repro.core.runtime_flags import serve_prequant
     from repro.models.attention import resolve_kv_cache_dtype
-    print(f"weights: {'pre-quantized fp8 (PrequantParams)' if server.prequant else 'in-graph quantize (REPRO_SERVE_PREQUANT=0)'}"
-          f" | kv cache: {resolve_kv_cache_dtype(cfg)}")
-    assert (server.prequant is not None) == (serve_prequant()
-                                            and cfg.quant.quantized)
-    done = server.run(requests)
+    print(f"weights: "
+          f"{'pre-quantized fp8 (PrequantParams)' if engine.prequant else 'in-graph quantize (REPRO_SERVE_PREQUANT=0)'}"
+          f" | kv cache: {resolve_kv_cache_dtype(cfg)}"
+          f" | page pool: {engine.kv.allocator.num_pages} pages x "
+          f"{engine.kv.allocator.page_size} tokens")
+    assert (engine.prequant is not None) == (serve_prequant()
+                                             and cfg.quant.quantized)
+    done = engine.run(requests)
+    assert all(r.done for r in done) and len(done) == len(requests)
     for r in done[:3]:
         print(f"request {r.rid}: prompt[:6]={r.prompt[:6].tolist()} "
               f"-> generated {r.out}")
+    s = engine.stats()
+    print(f"mean TTFT {1e3 * s['mean_ttft_s']:.1f} ms | "
+          f"mean TPOT {1e3 * s['mean_tpot_s']:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,18 @@ def serve_prequant() -> bool:
     return os.environ.get("REPRO_SERVE_PREQUANT", "1").strip() != "0"
 
 
+# Paged continuous-batching serving (see repro.serving and
+# launch/serve.py): the paged engine (per-slot lengths, block-table
+# page accounting, scheduler with TTFT/TPOT metrics, retirement of
+# finished slots from the decode batch) is the serving default.
+# REPRO_SERVE_PAGED=0 falls back to the legacy contiguous-ring
+# Server: one fixed-B slot cache, FIFO refill, no page accounting
+# (still per-slot-length-correct — docs/continuous-batching.md).
+def serve_paged() -> bool:
+    """Whether launch/serve.py drives the paged serving engine."""
+    return os.environ.get("REPRO_SERVE_PAGED", "1").strip() != "0"
+
+
 # Decode-attention path (see repro.models.attention._decode_attention
 # and repro.kernels.dispatch.decode_attention):
 #   "kernel" — route through the kernel dispatch: the fused Pallas

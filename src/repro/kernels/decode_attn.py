@@ -27,13 +27,18 @@ Operand contract (see docs/decode-attention.md)
                             itself (kv-head-major), read in place
   k_scale,  (B, KV, C)      f32 per-(token, kv-head) scales; None for
   v_scale                   the bf16 cache
-  n_valid   (1,)            int32 scalar-prefetch (SMEM): absolute
-                            positions written so far (cache ``idx``);
-                            must be ≥ 1 (decode attends after a write).
-                            Slot s is valid iff s < min(n_valid, C) —
-                            ring semantics: a wrapped cache (idx ≥ C)
-                            is fully valid, slot order is irrelevant
-                            to softmax
+  n_valid   (B,)            int32 scalar-prefetch (SMEM): per-batch
+                            absolute positions written so far (the
+                            per-slot cache ``idx`` of the continuous-
+                            batching engine — docs/continuous-
+                            batching.md); each entry must be ≥ 1
+                            (decode attends after a write).  A scalar
+                            (shared-ring legacy cache) broadcasts to
+                            (B,) at dispatch.  Slot s of batch row b
+                            is valid iff s < min(n_valid[b], C) — ring
+                            semantics: a wrapped cache (idx ≥ C) is
+                            fully valid, slot order is irrelevant to
+                            softmax
   returns   (B, KV, G, Dh)  f32 UNCAST attention output
 
 Grid is (B, KV, C/bc).  With one C block (``bc == C``, the common
@@ -92,11 +97,13 @@ def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
         # payload itself is never dequantized in HBM
         s = s * ks_ref[0, 0][None, :]
 
-    # ring-validity mask: slot < min(n_valid, C) covers the partial
+    # ring-validity mask: slot < min(n_valid[b], C) covers the partial
     # ring (idx < C), the fully-wrapped ring (all C slots valid) and
-    # the trailing partial block (slots ≥ C)
+    # the trailing partial block (slots ≥ C).  n_valid is per batch
+    # row — slots at different depths coexist in one decode batch
+    # (the continuous-batching engine's per-slot length vector).
     slot = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
-    nv = jnp.minimum(nv_ref[0], c_true)
+    nv = jnp.minimum(nv_ref[pl.program_id(0)], c_true)
     valid = slot < nv
     s = jnp.where(valid, s, NEG_INF)
 
@@ -159,7 +166,8 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
                        interpret: bool = False):
     """q: (B, KV, Gp, Dh) with Gp % 8 == 0 (dispatch pads); k/v:
     (B, KV, C, Dh) e4m3|bf16 payloads; k_scale/v_scale: (B, KV, C) f32
-    or both None (bf16 cache); n_valid: (1,) int32 scalar-prefetch.
+    or both None (bf16 cache); n_valid: (B,) int32 scalar-prefetch —
+    per-slot valid counts (a (1,) value broadcasts to every row).
     Returns (B, KV, Gp, Dh) f32.  ``bc`` picks the C block: defaults
     to one block (exact softmax) up to MAX_SINGLE_BLOCK, else the
     online multi-block path."""
@@ -203,6 +211,7 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
                                lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
         scratch_shapes=scratch,
     )
+    nv = jnp.broadcast_to(n_valid.astype(jnp.int32).reshape(-1), (b,))
     return pl.pallas_call(
         functools.partial(_decode_attn_kernel, n_c=n_c, bc=bc, c_true=c,
                           sm_scale=sm_scale, quantized=quantized,
@@ -212,4 +221,4 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
         interpret=interpret,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(n_valid.astype(jnp.int32).reshape(1), *args)
+    )(nv, *args)

@@ -294,7 +294,12 @@ def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
     ``q`` is (B, KV, G, Dh) — queries grouped by kv head (GQA); ``k`` /
     ``v`` are the cache payloads (B, KV, C, Dh) in e4m3 (with
     per-(token, kv-head) f32 ``k_scale``/``v_scale`` (B, KV, C)) or
-    bf16 (scales None); ``n_valid`` is the cache ``idx`` scalar (≥ 1).
+    bf16 (scales None); ``n_valid`` is the cache ``idx`` — a scalar
+    shared by every row (legacy ring) or a (B,) per-slot length
+    vector (continuous-batching engine, docs/continuous-batching.md:
+    slots at different depths coexist in one decode batch); every
+    entry must be ≥ 1.  A scalar is broadcast to (B,) here, so both
+    backends see one contract.
     Returns (B, KV, G, Dh) f32 — the caller reshapes heads and casts.
 
     The kernel path fuses scale application, ring-validity masking,
@@ -309,13 +314,16 @@ def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
     b, kvh, g, dh = q.shape
     if sm_scale is None:
         sm_scale = dh ** -0.5
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)
+    assert nv.shape[0] in (1, b), \
+        f"n_valid shape {nv.shape}: expected () / (1,) / ({b},)"
+    nv = jnp.broadcast_to(nv, (b,))
     if backend == "ref":
-        return ref.decode_attn_ref(q, k, v, k_scale, v_scale, n_valid,
+        return ref.decode_attn_ref(q, k, v, k_scale, v_scale, nv,
                                    sm_scale=sm_scale)
     gp = _ceil_to(max(g, 8), 8)
     out = decode_attn_pallas(
-        _pad_to(q, 2, gp), k, v, k_scale, v_scale,
-        jnp.asarray(n_valid, jnp.int32).reshape(1),
+        _pad_to(q, 2, gp), k, v, k_scale, v_scale, nv,
         sm_scale=sm_scale, interpret=backend == "interpret")
     return out[:, :, :g]
 

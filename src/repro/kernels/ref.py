@@ -76,20 +76,25 @@ def decode_attn_ref(q, k, v, k_scale, v_scale, n_valid, *,
     source of truth).
 
     q: (B, KV, G, Dh); k/v: (B, KV, C, Dh) e4m3|bf16 payloads;
-    k_scale/v_scale: (B, KV, C) f32 or both None; n_valid: () int32.
-    Per-(token, kv-head) scales fold into the score (K) and the
-    combine weight (V) instead of dequantizing the payload; slot
-    validity is ``slot < min(n_valid, C)`` (ring: a wrapped cache is
-    fully valid).  Returns (B, KV, G, Dh) f32."""
+    k_scale/v_scale: (B, KV, C) f32 or both None; n_valid: () int32
+    shared across rows, or (B,) int32 per-slot valid counts (the
+    continuous-batching engine's length vector — slots at different
+    depths coexist in one decode batch).  Per-(token, kv-head) scales
+    fold into the score (K) and the combine weight (V) instead of
+    dequantizing the payload; slot validity per batch row b is
+    ``slot < min(n_valid[b], C)`` (ring: a wrapped cache is fully
+    valid).  Returns (B, KV, G, Dh) f32."""
     from repro.core.runtime_flags import einsum
 
-    c = k.shape[2]
+    b, c = q.shape[0], k.shape[2]
     scores = einsum("bkgd,bktd->bkgt", q, k,
                     out_dtype=jnp.float32) * sm_scale
     if k_scale is not None:
         scores = scores * k_scale[:, :, None, :]
-    valid = jnp.arange(c) < jnp.minimum(n_valid, c)
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1),
+                          (b,))
+    valid = jnp.arange(c)[None, :] < jnp.minimum(nv, c)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     if v_scale is not None:
         w = w * v_scale[:, :, None, :]

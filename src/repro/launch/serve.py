@@ -1,24 +1,15 @@
-"""Batched serving driver: continuous-batching loop over a request
-queue with prefill + decode steps and per-slot stop handling.
+"""Serving CLI: a thin driver over the paged continuous-batching
+engine (``repro.serving.Engine``, the default) with the legacy
+contiguous-ring ``Server`` as the ``REPRO_SERVE_PAGED=0`` fallback.
 
-Requests enter a fixed-size batch of decode slots; finished slots are
-refilled from the queue (continuous batching a la vLLM, jax-native).
-
-The whole weight stack is pre-quantized to fp8 payloads + scales ONCE
-at server build time (``prequantize_params`` -> ``PrequantParams``):
-the serving weights are frozen, so quantizing them — or even just
-re-reducing ``max|W|`` — inside every prefill/decode step would be
-pure waste.  The decode graph therefore contains zero weight quantize
-or max-reduction ops and reads 1 byte/element of weight HBM traffic
-(the memory-bound decode roofline win); the KV cache is fp8 by default
-for the same reason (docs/serving.md), and the decode step consumes it
-through the fused Pallas decode-attention kernel — ring masking, scale
-application, softmax and the value combine in one launch, zero
-cache-sized dequant ops in the decode jaxpr
-(docs/decode-attention.md).  ``REPRO_SERVE_PREQUANT=0`` falls back to
-cached-scale in-graph quantization; ``REPRO_KV_CACHE=bf16`` restores
-the bf16 cache; ``REPRO_DECODE_ATTN=einsum`` pins the scale-folding
-einsum decode attention.
+The engine layer (docs/continuous-batching.md) owns admission,
+page-exhaustion backpressure, per-slot depths and retirement; both
+paths share the fp8-at-rest serving stack: weights pre-quantized once
+at build (``PrequantParams``; ``REPRO_SERVE_PREQUANT=0`` falls back to
+cached-scale in-graph quantization), the fp8 KV cache default
+(``REPRO_KV_CACHE=bf16`` restores bf16) and the fused Pallas decode-
+attention kernel (``REPRO_DECODE_ATTN=einsum`` pins the scale-folding
+einsum path) — see docs/serving.md.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
@@ -28,7 +19,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -36,66 +26,62 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.core.runtime_flags import serve_paged
 from repro.models.layers import init_tree
-from repro.models.transformer import model_defs
-from repro.core.runtime_flags import serve_prequant
-from repro.train.steps import (
-    make_decode_step,
-    make_prefill_step,
-    prequantize_params,
-    serve_weight_scales,
-)
+from repro.models.transformer import init_caches, model_defs
+from repro.serving import Engine, Request, greedy_sample, prepare_weights
+from repro.serving.paged_cache import write_row
+from repro.serving.scheduler import RequestState, hit_stop
+from repro.train.steps import make_decode_step, make_prefill_step
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (S,) int32
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-def greedy_sample(logits):
-    return jnp.argmax(logits[:, -1], axis=-1)
+__all__ = ["Engine", "Request", "Server", "greedy_sample", "main"]
 
 
 class Server:
-    """Continuous batching: B decode slots over one shared KV cache."""
+    """Legacy continuous batching: a FIXED batch of B decode slots over
+    one slot-shaped KV cache, FIFO refill — no page accounting, no
+    scheduler, no retirement of finished rows from the decode batch
+    (the paged ``Engine`` adds all three; this class is the
+    ``REPRO_SERVE_PAGED=0`` fallback).
+
+    Correctness note: the cache is allocated ONCE at build with
+    per-slot lengths (``init_caches(..., per_slot=True)`` — ``idx`` is
+    a (B,) vector), so a refilled request whose prefill length differs
+    from the incumbents keeps every slot's depth, ring position and
+    validity mask intact.  The historical single shared scalar ``idx``
+    was silently clobbered with the newest request's offset on every
+    refill, corrupting incumbent slots at different depths."""
 
     def __init__(self, cfg, params, batch_slots: int, max_len: int):
         self.cfg = cfg
         self.B = batch_slots
         self.max_len = max_len
-        # build-time weight pre-quantization: the full fp8 payload +
-        # scale stack replaces the f32 params for every serving step —
-        # no weight quantize/max-reduction ops in the jitted graphs.
-        # REPRO_SERVE_PREQUANT=0 falls back to cached per-tensor
-        # scales (in-graph quantize against frozen scales).
-        self.prequant = (prequantize_params(cfg, params)
-                         if serve_prequant() else None)
-        if self.prequant is not None:
-            self.params = self.prequant.qweights
-            self.scales = self.prequant.scales
-        else:
-            self.params = params
-            self.scales = serve_weight_scales(cfg, params)
+        self.params, self.scales, self.prequant = \
+            prepare_weights(cfg, params)
         self.prefill = jax.jit(make_prefill_step(cfg, max_len,
                                                  scales=self.scales))
         self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
                               donate_argnums=(1,))
+        # slot-shaped caches at build: B rows, per-slot idx vector
+        self.caches = init_caches(cfg, batch_slots, max_len,
+                                  per_slot=True)
         self.slots: list[Request | None] = [None] * batch_slots
-        self.caches = None
 
     def _prefill_request(self, req: Request, slot: int):
+        req.state = RequestState.RUNNING
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, caches = self.prefill(self.params, {"tokens": toks})
-        nxt = int(greedy_sample(logits)[0])
-        req.out.append(nxt)
-        # merge this request's single-row cache into slot `slot`
-        if self.caches is None:
-            self.caches = _bcast_rows(caches, self.B)
-        self.caches = _write_slot(self.caches, caches, slot)
+        logits, one = self.prefill(self.params, {"tokens": toks})
+        self._on_token(req, int(greedy_sample(logits)[0]))
+        # merge this request's single-row cache into slot `slot`,
+        # stamping ITS prompt length into idx[slot] only — incumbent
+        # slots at other depths are untouched
+        self.caches = write_row(self.caches, one, jnp.int32(slot),
+                                jnp.int32(len(req.prompt)))
+
+    def _on_token(self, req: Request, token: int):
+        req.out.append(token)
+        if hit_stop(req, token):
+            req.state = RequestState.FINISHED
 
     def step(self, queue: list[Request]):
         # refill free slots
@@ -105,10 +91,11 @@ class Server:
                     req = queue.pop(0)
                     self._prefill_request(req, i)
                     self.slots[i] = req
-        # batched decode for active slots
+        # batched decode for active slots (finished slots still ride
+        # along at fixed B — the paged engine retires them instead)
         active = [i for i in range(self.B)
                   if self.slots[i] is not None and not self.slots[i].done]
-        if not active or self.caches is None:
+        if not active:
             return
         last = np.zeros((self.B, 1), np.int32)
         for i in active:
@@ -117,10 +104,7 @@ class Server:
                                           jnp.asarray(last))
         nxt = np.asarray(greedy_sample(logits))
         for i in active:
-            req = self.slots[i]
-            req.out.append(int(nxt[i]))
-            if len(req.out) >= req.max_new:
-                req.done = True
+            self._on_token(self.slots[i], int(nxt[i]))
 
     def run(self, requests: list[Request], log=print):
         queue = list(requests)
@@ -139,25 +123,6 @@ class Server:
         return requests
 
 
-def _bcast_rows(caches, b):
-    """Layer-stacked cache leaves are (L, 1, ...) after a B=1 prefill;
-    expand the batch dim to the slot count."""
-    def f(c):
-        if c.ndim >= 2 and c.shape[1] == 1:
-            return jnp.broadcast_to(
-                jnp.zeros_like(c), (c.shape[0], b, *c.shape[2:])).copy()
-        return c
-    return jax.tree.map(f, caches)
-
-
-def _write_slot(caches_all, caches_one, slot):
-    def f(a, o):
-        if a.ndim >= 2 and o.ndim == a.ndim and o.shape[1] == 1:
-            return a.at[:, slot:slot + 1].set(o.astype(a.dtype))
-        return o  # idx scalars: take the new absolute position
-    return jax.tree.map(f, caches_all, caches_one)
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
@@ -166,22 +131,44 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool budget (default: fully backed "
+                         "slots); smaller values exercise admission "
+                         "backpressure")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="force the legacy contiguous-ring Server "
+                         "(same as REPRO_SERVE_PAGED=0)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     defs = model_defs(cfg)
     params = init_tree(defs, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
+    # mixed prompt lengths: the paged engine serves them concurrently
+    # at their true depths (the legacy ring also stays correct now —
+    # per-slot lengths — it just never retires finished rows)
+    lens = rng.integers(max(4, args.prompt_len // 2),
+                        args.prompt_len + 1, size=args.requests)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        size=args.prompt_len,
+                    prompt=rng.integers(0, cfg.vocab, size=int(n),
                                         dtype=np.int32),
                     max_new=args.max_new)
-            for i in range(args.requests)]
-    server = Server(cfg, params, args.slots,
-                    max_len=args.prompt_len + args.max_new + 1)
-    server.run(reqs)
+            for i, n in enumerate(lens)]
+    max_len = args.prompt_len + args.max_new + 1
+    if args.legacy or not serve_paged():
+        print("path: legacy contiguous-ring Server "
+              "(REPRO_SERVE_PAGED=0)")
+        server = Server(cfg, params, args.slots, max_len=max_len)
+        server.run(reqs)
+    else:
+        print("path: paged continuous-batching engine "
+              "(docs/continuous-batching.md)")
+        engine = Engine(cfg, params, args.slots, max_len=max_len,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages)
+        engine.run(reqs)
 
 
 if __name__ == "__main__":

@@ -40,10 +40,17 @@ class KVCache(NamedTuple):
       k_scale,  (B, KV, C)      f32 per-(token, kv-head) scales when
       v_scale                   fp8, else None — one scale per written
                                 position's head vector (amax over Dh)
-      idx       ()              int32: absolute position of the next
+      idx       () | (B,)       int32: absolute position of the next
                                 write (NOT mod C) — doubles as the
                                 valid-token count: slot s holds a live
-                                position iff s < min(idx, C)
+                                position iff s < min(idx, C).  Scalar:
+                                one shared ring position for every
+                                batch row (training-eval / legacy
+                                serving).  Vector (``per_slot`` cache,
+                                the continuous-batching engine): each
+                                row tracks its own depth, so requests
+                                with different prompt lengths coexist
+                                (docs/continuous-batching.md)
 
     The fp8 layout halves the decode-step HBM read (the
     memory-roofline term that dominates decode cells —
@@ -114,17 +121,21 @@ def resolve_kv_cache_dtype(cfg) -> str:
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    """Builds the shared-scalar-``idx`` cache; the serving engine's
+    per-slot variant (``idx`` as a (B,) vector) is produced by
+    ``transformer.init_caches(per_slot=True)``, which widens the idx
+    of every cache node in one place."""
     c = cache_len(cfg, max_len)
     shape = (batch, cfg.n_kv, c, cfg.head_dim)
+    idx = jnp.zeros((), jnp.int32)
     if resolve_kv_cache_dtype(cfg) == "fp8":
         return KVCache(k=jnp.zeros(shape, jnp.float8_e4m3fn),
                        v=jnp.zeros(shape, jnp.float8_e4m3fn),
                        k_scale=jnp.zeros(shape[:-1], jnp.float32),
                        v_scale=jnp.zeros(shape[:-1], jnp.float32),
-                       idx=jnp.zeros((), jnp.int32))
+                       idx=idx)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
-                   k_scale=None, v_scale=None,
-                   idx=jnp.zeros((), jnp.int32))
+                   k_scale=None, v_scale=None, idx=idx)
 
 
 def cache_logical(cfg) -> KVCache:
@@ -197,7 +208,11 @@ def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
     s_new = k_new.shape[2]
     if s_new >= c:
         # keep the last C positions (prefill of a window cache);
-        # ring layout: position p lives in slot p % C
+        # ring layout: position p lives in slot p % C.  Never reached
+        # with a per-slot idx vector: the engine prefills one request
+        # at a time into a fresh scalar-idx cache and merges rows.
+        assert cache.idx.ndim == 0, "multi-token ring append needs a " \
+            "shared scalar idx (engine prefills per request)"
         start = (cache.idx + s_new - c) % c
         roll = lambda x: jnp.roll(x[:, :, -c:].astype(x.dtype), start,
                                   axis=2)
@@ -206,14 +221,34 @@ def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
                        roll(ks_new) if fp8 else None,
                        roll(vs_new) if fp8 else None,
                        cache.idx + s_new)
+    start = cache.idx % c
+    zero = jnp.zeros((), jnp.int32)
+
+    if cache.idx.ndim == 1:
+        # per-slot cache: every batch row writes at its own ring
+        # position (decode slots at different depths).  vmap the
+        # row-level dynamic_update_slice over the batched start —
+        # lowers to a scatter (single-host serving; the SPMD caveat
+        # below doesn't bite because the engine runs unsharded).
+        assert s_new == 1, "per-slot cache appends decode one token"
+
+        def dus_row(buf, upd, st):
+            idxs = (zero, st) + (zero,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                buf, upd.astype(buf.dtype), idxs)
+
+        dus_b = jax.vmap(dus_row, in_axes=(0, 0, 0))
+        k = dus_b(cache.k, k_new, start)
+        v = dus_b(cache.v, v_new, start)
+        ks = dus_b(cache.k_scale, ks_new, start) if fp8 else None
+        vs = dus_b(cache.v_scale, vs_new, start) if fp8 else None
+        return KVCache(k, v, ks, vs, cache.idx + s_new)
+
     # contiguous in-place write (decode: one slot; prefill: [idx, idx+s))
     # via dynamic_update_slice — advanced-index scatter would lower to a
     # full-cache f32 select copy under SPMD.  Wraparound can only occur
     # for multi-token appends into a ring cache mid-stream, which the
     # serving engine never does (prefill starts at idx=0; decode s=1).
-    start = cache.idx % c
-    zero = jnp.zeros((), jnp.int32)
-
     def dus(buf, upd):
         idxs = (zero, zero, start) + (zero,) * (buf.ndim - 3)
         return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype),

@@ -24,7 +24,9 @@ from ._attn_core import chunked_attention
 class MLACache(NamedTuple):
     c_kv: jax.Array    # (B, T, kv_lora)
     k_rope: jax.Array  # (B, T, q_rope)
-    idx: jax.Array
+    idx: jax.Array     # () shared write position, or (B,) per-slot
+                       # lengths (continuous-batching engine — rows at
+                       # different depths; docs/continuous-batching.md)
 
 
 def mla_defs(cfg):
@@ -45,6 +47,7 @@ def mla_defs(cfg):
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    # per-slot idx (B,) is widened by transformer.init_caches(per_slot=)
     return MLACache(
         c_kv=jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
         k_rope=jnp.zeros((batch, max_len, cfg.q_rope), dtype),
@@ -83,14 +86,24 @@ def mla_attention(cfg, p, x, positions, qcfg: QuantConfig,
         t = cache.c_kv.shape[1]
         start = cache.idx % t
         zero = jnp.zeros((), jnp.int32)
-        new_cache = MLACache(
-            c_kv=jax.lax.dynamic_update_slice(
-                cache.c_kv, c_kv.astype(cache.c_kv.dtype),
-                (zero, start, zero)),
-            k_rope=jax.lax.dynamic_update_slice(
-                cache.k_rope, k_r.astype(cache.k_rope.dtype),
-                (zero, start, zero)),
-            idx=cache.idx + s)
+        if cache.idx.ndim == 1:
+            # per-slot cache: each batch row appends at its own depth
+            dus_row = jax.vmap(
+                lambda buf, upd, st: jax.lax.dynamic_update_slice(
+                    buf, upd.astype(buf.dtype), (st, zero)),
+                in_axes=(0, 0, 0))
+            new_cache = MLACache(c_kv=dus_row(cache.c_kv, c_kv, start),
+                                 k_rope=dus_row(cache.k_rope, k_r, start),
+                                 idx=cache.idx + s)
+        else:
+            new_cache = MLACache(
+                c_kv=jax.lax.dynamic_update_slice(
+                    cache.c_kv, c_kv.astype(cache.c_kv.dtype),
+                    (zero, start, zero)),
+                k_rope=jax.lax.dynamic_update_slice(
+                    cache.k_rope, k_r.astype(cache.k_rope.dtype),
+                    (zero, start, zero)),
+                idx=cache.idx + s)
         # absorbed decode: q_lat[b,h,L] = q_nope · W_uk
         q_lat = rf_einsum("bshn,lhn->bshl", q_n, p["w_uk"].w,
                           out_dtype=jnp.float32)
@@ -99,8 +112,9 @@ def mla_attention(cfg, p, x, positions, qcfg: QuantConfig,
                   + rf_einsum("bshr,btr->bsht", q_r, new_cache.k_rope,
                               out_dtype=jnp.float32))
         scores *= (cfg.q_nope + cfg.q_rope) ** -0.5
-        valid = jnp.arange(t) < jnp.minimum(new_cache.idx, t)
-        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        nv = jnp.broadcast_to(new_cache.idx.reshape(-1), (b,))
+        valid = jnp.arange(t)[None, :] < jnp.minimum(nv, t)[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         ctx_lat = rf_einsum("bsht,btl->bshl", w, new_cache.c_kv,
                             out_dtype=jnp.float32)            # (B,1,H,512)

@@ -256,14 +256,49 @@ def model_defs(cfg) -> dict:
     return defs
 
 
-def init_caches(cfg, batch: int, max_len: int):
-    """Stacked caches for every segment (decode/prefill)."""
+def map_cache_nodes(tree, fn):
+    """Apply ``fn`` to every cache/state NamedTuple (KVCache, MLACache,
+    RGLRUState, RWKVState — anything with an ``idx`` field) inside a
+    caches pytree, preserving the surrounding dict/tuple structure."""
+    if hasattr(tree, "_replace") and hasattr(tree, "idx"):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_cache_nodes(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(map_cache_nodes(v, fn) for v in tree)
+    return tree
+
+
+def iter_cache_nodes(tree):
+    """Yield every cache/state NamedTuple (see ``map_cache_nodes``)."""
+    if hasattr(tree, "_replace") and hasattr(tree, "idx"):
+        yield tree
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            yield from iter_cache_nodes(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from iter_cache_nodes(v)
+
+
+def init_caches(cfg, batch: int, max_len: int, per_slot: bool = False):
+    """Stacked caches for every segment (decode/prefill).
+
+    ``per_slot=True`` builds the serving-engine variant: every cache
+    node's ``idx`` becomes a (batch,) vector so decode slots track
+    independent depths (docs/continuous-batching.md).  The payload
+    layout is identical — only the write-position/validity bookkeeping
+    widens."""
     caches = {}
     for seg in build_segments(cfg):
         if seg.init_cache is None:
             caches[seg.name] = None
             continue
         one = seg.init_cache(cfg, batch, max_len)
+        if per_slot:
+            one = map_cache_nodes(
+                one, lambda n: n._replace(
+                    idx=jnp.zeros((batch,), jnp.int32)))
         caches[seg.name] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (seg.n, *x.shape)).copy()
             if hasattr(x, "shape") else x, one)
@@ -287,15 +322,17 @@ def forward(cfg, qcfg: QuantConfig, params, batch: dict,
         x = embed_tokens(cfg, params["embed"], tokens)
 
     if mode == "decode" and caches is not None:
-        first = jax.tree.leaves(caches)
         pos0 = _first_idx(caches)
-        positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+        if pos0.ndim:        # per-slot cache: (B,) depths -> (B, S)
+            positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)
+        else:
+            positions = pos0 + jnp.arange(s, dtype=jnp.int32)
     else:
         positions = jnp.arange(s, dtype=jnp.int32)
 
     if cfg.pos_embedding == "sinusoidal":
-        x = x + sinusoidal_embedding(positions, cfg.d_model)[None].astype(
-            x.dtype)
+        pe = sinusoidal_embedding(positions, cfg.d_model)
+        x = x + (pe if positions.ndim > 1 else pe[None]).astype(x.dtype)
 
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = {}
@@ -343,19 +380,15 @@ def forward(cfg, qcfg: QuantConfig, params, batch: dict,
 
 
 def _first_idx(caches):
-    # every cache tracks the same absolute position; take any `idx`
+    # every cache tracks the same absolute position(s); take any `idx`.
+    # Stacked over layers: (L,) shared scalar -> (), (L, B) per-slot
+    # vector -> (B,) — strip the layer dim and return the rest.
     for c in caches.values():
         if c is None:
             continue
-        tree = c
-        # KVCache/MLACache/RWKVState/RGLRUState all end with `idx`
-        leaves = jax.tree.leaves(tree)
-        # idx leaves are the int32 scalars stacked over layers
-        for leaf in leaves:
-            if leaf.dtype == jnp.int32 and leaf.ndim == 1:
-                return leaf[0]
-            if leaf.dtype == jnp.int32 and leaf.ndim == 0:
-                return leaf
+        for node in iter_cache_nodes(c):
+            if node.idx is not None:
+                return node.idx[0]
     return jnp.zeros((), jnp.int32)
 
 

@@ -1,0 +1,42 @@
+"""Paged-KV continuous-batching serving engine
+(docs/continuous-batching.md).
+
+- ``paged_cache`` — block-table page accounting (``PageAllocator``)
+  over the per-slot device cache rows (``PagedKVCache``);
+- ``scheduler`` — FIFO admission, EOS/max_new retirement, TTFT/TPOT
+  metrics (``Scheduler``, ``Request``);
+- ``engine`` — prefill-into-slot + batched decode over the per-slot
+  length vector (``Engine``).
+
+``launch/serve.py`` is the CLI over this package; the legacy
+contiguous-ring ``Server`` there is the ``REPRO_SERVE_PAGED=0``
+fallback.
+"""
+
+from .engine import Engine, greedy_sample, prepare_weights
+from .paged_cache import (
+    PAGE_SIZE,
+    BlockTable,
+    PageAllocator,
+    PagedCacheError,
+    PagedKVCache,
+    PageExhausted,
+    SlotCapacityExceeded,
+)
+from .scheduler import Request, RequestState, Scheduler
+
+__all__ = [
+    "Engine",
+    "greedy_sample",
+    "prepare_weights",
+    "PAGE_SIZE",
+    "BlockTable",
+    "PageAllocator",
+    "PagedCacheError",
+    "PagedKVCache",
+    "PageExhausted",
+    "SlotCapacityExceeded",
+    "Request",
+    "RequestState",
+    "Scheduler",
+]

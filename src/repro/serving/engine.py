@@ -1,0 +1,258 @@
+"""Continuous-batching serving engine over the paged KV cache — the
+layer between the model's prefill/decode step functions and the
+``launch/serve.py`` CLI (docs/continuous-batching.md).
+
+One engine ``step()``:
+
+  1. retire finished requests: free their pages, then either refill
+     the row in place from the queue (steady state) or swap-shrink it
+     out of the decode batch (tail drain — finished slots never feed
+     another decode step);
+  2. admit queued requests while slots and pages allow (page
+     exhaustion = backpressure, the request stays queued);
+  3. one batched decode over the resident rows — every row active,
+     each at its own depth via the per-slot length vector that flows
+     ``KVCache.idx (B,)`` -> per-slot RoPE positions -> per-slot ring
+     writes -> the decode-attention kernel's ``n_valid`` scalar-
+     prefetch vector.
+
+Prefill runs one request at a time (B=1) into a fresh cache and the
+result row is merged into the batch — so a request's tokens are
+bitwise independent of whichever other requests happen to be resident
+(the mixed-depth parity contract, asserted in
+tests/test_paged_serving.py).  Prompts are right-padded to a compile
+bucket (``prompt_bucket``) so prefill compiles once per bucket, not
+once per prompt length; the true length is what gets stamped into the
+merged row's ``idx``, so padded garbage positions are never attended.
+
+Weights are pre-quantized at build exactly like the legacy Server
+(``PrequantParams``; ``REPRO_SERVE_PREQUANT=0`` falls back to cached
+scales).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime_flags import serve_prequant
+from repro.train.steps import (
+    make_decode_step,
+    make_prefill_step,
+    prequantize_params,
+    serve_weight_scales,
+)
+
+from .paged_cache import (
+    PAGE_SIZE,
+    PagedKVCache,
+    PageExhausted,
+    SlotCapacityExceeded,
+)
+from .scheduler import Request, Scheduler
+
+PROMPT_BUCKET = 16
+
+
+def prepare_weights(cfg, params):
+    """Build-time weight preparation shared by the engine and the
+    legacy Server: pre-quantized fp8 payloads + scales by default,
+    cached per-tensor scales under ``REPRO_SERVE_PREQUANT=0``.
+    Returns (params_tree, scales, prequant_or_None)."""
+    prequant = (prequantize_params(cfg, params)
+                if serve_prequant() else None)
+    if prequant is not None:
+        return prequant.qweights, prequant.scales, prequant
+    return params, serve_weight_scales(cfg, params), None
+
+
+def greedy_sample(logits):
+    """(B, 1, V) last-position logits -> (B,) next token ids."""
+    return jnp.argmax(logits[:, -1], axis=-1)
+
+
+class Engine:
+    """Paged-KV continuous-batching engine (see module docstring)."""
+
+    def __init__(self, cfg, params, num_slots: int, max_len: int, *,
+                 page_size: int = PAGE_SIZE,
+                 num_pages: int | None = None,
+                 prompt_bucket: int = PROMPT_BUCKET,
+                 eos_id: int | None = None):
+        if cfg.input_mode != "tokens":
+            raise ValueError(
+                f"serving engine drives token models; {cfg.name} has "
+                f"input_mode={cfg.input_mode!r}")
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_slots = num_slots
+        # recurrent state (RWKV / RG-LRU) integrates every prefill
+        # token — padded garbage would corrupt it (attention caches
+        # just mask it), so those families prefill at exact length
+        # (one compile per distinct prompt length)
+        self.prompt_bucket = (1 if cfg.family in ("ssm", "hybrid")
+                              else prompt_bucket)
+        self.eos_id = eos_id
+        self.params, self.scales, self.prequant = \
+            prepare_weights(cfg, params)
+        self.prefill = jax.jit(make_prefill_step(cfg, max_len,
+                                                 scales=self.scales))
+        self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
+                              donate_argnums=(1,))
+        self.kv = PagedKVCache(cfg, max_len, num_slots,
+                               page_size=page_size, num_pages=num_pages)
+        self.sched = Scheduler()
+        self.requests: dict[int, Request] = {}
+
+    # -- admission -----------------------------------------------------
+    def _total_tokens(self, req: Request) -> int:
+        # worst-case resident K/V: prompt + every decode-step write
+        # (the last generated token is sampled but never written)
+        return req.prompt_len + req.max_new - 1
+
+    def submit(self, requests: list[Request]) -> None:
+        for req in requests:
+            if req.eos_id is None:
+                req.eos_id = self.eos_id
+            total = self._total_tokens(req)
+            if not self.kv.ring and total > self.kv.slot_tokens:
+                raise SlotCapacityExceeded(
+                    f"request {req.rid}: prompt {req.prompt_len} + "
+                    f"max_new {req.max_new} needs {total} cache "
+                    f"positions > slot capacity {self.kv.slot_tokens}")
+            al = self.kv.allocator
+            need = al.pages_needed(self.kv._resident(total))
+            if need > al.num_pages:
+                # can never be admitted: reject at submit instead of
+                # letting head-of-line FIFO livelock the queue
+                raise PageExhausted(
+                    f"request {req.rid}: worst-case reservation of "
+                    f"{need} pages exceeds the whole pool "
+                    f"({al.num_pages} pages)")
+            self.requests[req.rid] = req
+        self.sched.submit(requests)
+
+    def _bucket_len(self, n: int) -> int:
+        c = self.kv.slot_tokens
+        if n >= c:
+            return n          # ring keep-last-C prefill path, exact
+        return min(c, -(-n // self.prompt_bucket) * self.prompt_bucket)
+
+    def _prefill_request(self, req: Request):
+        """B=1 prefill of a (bucket-padded) prompt; returns the one-row
+        caches.  Emits the request's first generated token (TTFT)."""
+        n = req.prompt_len
+        toks = np.zeros((1, self._bucket_len(n)), np.int32)
+        toks[0, :n] = req.prompt
+        logits, one = self.prefill(self.params, {"tokens":
+                                                 jnp.asarray(toks)},
+                                   jnp.int32(min(n, toks.shape[1]) - 1))
+        self.sched.on_token(req, int(greedy_sample(logits)[0]))
+        return one
+
+    def _admissible_head(self) -> Request | None:
+        head = self.sched.peek()
+        if head is None:
+            return None
+        if not self.kv.can_admit(self._total_tokens(head)):
+            return None       # page backpressure: stays queued
+        return head
+
+    # -- the engine step -----------------------------------------------
+    def step(self) -> None:
+        self._retire_and_refill()
+        self._admit_new_rows()
+        self._decode_once()
+
+    def _retire_and_refill(self):
+        row = 0
+        while row < len(self.kv.rows):
+            owner = self.kv.rows[row]
+            if owner is not None and not self.requests[owner].done:
+                row += 1
+                continue
+            if owner is not None:
+                self.kv.release(row)
+            if self._admissible_head() is not None:
+                req = self.sched.pop()
+                one = self._prefill_request(req)
+                self.kv.refill(row, req.rid, one, req.prompt_len,
+                               self._total_tokens(req))
+                # the refill may itself already be done (max_new == 1
+                # or instant EOS): the loop re-checks this row
+            else:
+                self.kv.shrink(row)
+                # the swapped-in last row is re-checked at this index
+
+    def _admit_new_rows(self):
+        while len(self.kv.rows) < self.num_slots:
+            if self._admissible_head() is None:
+                break
+            req = self.sched.pop()
+            one = self._prefill_request(req)
+            self.kv.append(req.rid, one, req.prompt_len,
+                           self._total_tokens(req))
+            if self.requests[req.rid].done:       # instant finish
+                self._retire_and_refill()
+
+    def _decode_once(self):
+        rows = self.kv.rows
+        if not rows:
+            return
+        last = np.array([[self.requests[r].out[-1]] for r in rows],
+                        np.int32)
+        logits, self.kv.caches = self.decode(
+            self.params, self.kv.caches, jnp.asarray(last))
+        self.kv.advance()
+        nxt = np.asarray(greedy_sample(logits))
+        for i, rid in enumerate(list(rows)):
+            self.sched.on_token(self.requests[rid], int(nxt[i]))
+
+    # -- driver --------------------------------------------------------
+    def run(self, requests: list[Request] | None = None, log=print):
+        """Drain the queue; returns the requests that finished during
+        THIS call (an engine instance can serve several runs — the jit
+        caches on its step functions carry over)."""
+        if requests:
+            self.submit(requests)
+        done_before = {rid for rid, r in self.requests.items() if r.done}
+        toks_before = sum(len(r.out) for r in self.requests.values())
+        t0 = time.monotonic()
+        steps = 0
+        while self.sched.queue or self.kv.rows:
+            self.step()
+            steps += 1
+            if steps > 100_000:
+                raise RuntimeError("serving loop did not converge")
+        dt = time.monotonic() - t0
+        done = [r for rid, r in self.requests.items()
+                if r.done and rid not in done_before]
+        toks = sum(len(r.out) for r in self.requests.values()) \
+            - toks_before
+        if log is not None:
+            ttfts = [r.ttft for r in done if r.ttft is not None]
+            tpots = [r.tpot for r in done if r.tpot is not None]
+            mean = lambda v: float(np.mean(v)) if v else float("nan")
+            log(f"served {len(done)} requests, {toks} tokens in "
+                f"{dt:.2f}s ({toks / max(dt, 1e-9):,.1f} tok/s, "
+                f"{steps} engine steps, mean TTFT "
+                f"{1e3 * mean(ttfts):.1f} ms, mean TPOT "
+                f"{1e3 * mean(tpots):.1f} ms)")
+        return done
+
+    def stats(self) -> dict:
+        return self.sched.summary()
+
+    def prune_finished(self) -> int:
+        """Drop finished requests from the engine's history.  A
+        long-lived engine keeps every request for ``stats()``; call
+        this between runs to bound memory (returns the count pruned —
+        their metrics leave ``stats()`` with them)."""
+        done = [rid for rid, r in self.requests.items() if r.done]
+        for rid in done:
+            del self.requests[rid]
+        self.sched.all = [r for r in self.sched.all if not r.done]
+        return len(done)

@@ -1,0 +1,333 @@
+"""Paged KV cache: block-table page accounting + the per-slot device
+cache it governs (docs/continuous-batching.md).
+
+Two layers, deliberately separate:
+
+``PageAllocator`` (host-side bookkeeping)
+    A vLLM-style block-table allocator over a pool of fixed-size pages
+    (``page_size`` tokens each).  Admission reserves a request's
+    worst-case page count (prompt + max_new, clamped to the slot's
+    ring capacity) so decode can never run out mid-request — there is
+    no preemption in this engine, so reservation-based admission is
+    the no-corruption guarantee.  Physical pages are allocated lazily
+    as the sequence actually grows and freed on retirement.  The pool
+    may be smaller than ``num_slots`` full rows (over-committed slots
+    — the vLLM memory argument: mean sequence length < capacity), in
+    which case admission backpressure, not slot count, bounds
+    concurrency.
+
+``PagedKVCache`` (device rows + lengths)
+    The device-side cache keeps the existing kv-head-major
+    ``(B, KV, C, Dh)`` payload + scale layout — one contiguous row
+    per slot — with the per-slot length vector (``KVCache.idx`` as a
+    ``(B,)`` vector) carrying each row's depth.  A slot's logical
+    page j therefore maps to byte range ``[j*page, (j+1)*page)`` of
+    its own row: the block table is real accounting over an
+    identity physical mapping.  Letting pages float across rows
+    (true non-contiguous placement) requires block-table indirection
+    inside the decode kernel and is the ROADMAP follow-up; every
+    interface here (admission, growth, release, exhaustion) is
+    already expressed in pages so that change stays below this API.
+
+    The row dimension is *dynamic*: admission appends a row, and
+    retiring a finished request removes its row (the last row is
+    swapped in, then the batch shrinks) — finished slots never feed
+    another decode step.  jit recompiles per row count; counts only
+    walk 1..num_slots so the compile set is bounded and reused across
+    the serving run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import cache_len
+from repro.models.transformer import map_cache_nodes
+
+PAGE_SIZE = 16
+
+
+class PagedCacheError(RuntimeError):
+    pass
+
+
+class PageExhausted(PagedCacheError):
+    """The page pool cannot cover the requested reservation —
+    admission-time backpressure (the scheduler keeps the request
+    queued instead of corrupting a resident slot)."""
+
+
+class SlotCapacityExceeded(PagedCacheError):
+    """A sequence would outgrow its slot's ring capacity C on a
+    non-windowed arch — writing on would wrap the ring and silently
+    clobber live positions, so this raises *before* corruption."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-max(n_tokens, 0) // page_size)
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One slot's logical->physical page map.  ``pages[j]`` is the
+    physical page id backing tokens [j*page_size, (j+1)*page_size)."""
+    owner: int
+    pages: list[int] = dataclasses.field(default_factory=list)
+    reserved: int = 0          # worst-case pages admission committed to
+
+
+class PageAllocator:
+    """Fixed-size-page pool accounting with reservation-based
+    admission (see module docstring)."""
+
+    def __init__(self, num_pages: int, page_size: int = PAGE_SIZE,
+                 slot_tokens: int | None = None):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # per-slot ring capacity in tokens; None = unbounded rows
+        self.slot_tokens = slot_tokens
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._tables: dict[int, BlockTable] = {}
+        self._committed = 0        # sum of outstanding reservations
+
+    # -- introspection -------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def committed_pages(self) -> int:
+        return self._committed
+
+    def table(self, owner: int) -> BlockTable:
+        return self._tables[owner]
+
+    def _clamp(self, n_tokens: int) -> int:
+        if self.slot_tokens is None:
+            return n_tokens
+        return min(n_tokens, self.slot_tokens)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return pages_for(self._clamp(n_tokens), self.page_size)
+
+    # -- lifecycle -----------------------------------------------------
+    def can_admit(self, total_tokens: int) -> bool:
+        """Whether a request whose lifetime resident size is
+        ``total_tokens`` fits under the outstanding reservations."""
+        return (self._committed + self.pages_needed(total_tokens)
+                <= self.num_pages)
+
+    def admit(self, owner: int, prompt_tokens: int,
+              total_tokens: int) -> BlockTable:
+        """Reserve ``total_tokens`` worth of pages and allocate the
+        prompt's pages now.  Raises ``PageExhausted`` when the pool
+        cannot cover the reservation."""
+        assert owner not in self._tables, f"owner {owner} already resident"
+        need = self.pages_needed(total_tokens)
+        if self._committed + need > self.num_pages:
+            raise PageExhausted(
+                f"reservation of {need} pages for owner {owner} exceeds "
+                f"pool ({self._committed}/{self.num_pages} committed)")
+        bt = BlockTable(owner=owner, reserved=need)
+        self._tables[owner] = bt
+        self._committed += need
+        self._alloc_to(bt, self.pages_needed(prompt_tokens))
+        return bt
+
+    def grow(self, owner: int, resident_tokens: int) -> None:
+        """Back ``resident_tokens`` with physical pages (one decode
+        step usually crosses a page boundary every ``page_size``
+        steps).  Raises ``SlotCapacityExceeded`` past the slot ring
+        and ``PageExhausted`` if growth outruns the reservation into
+        an empty pool (impossible under reservation-based admission —
+        kept as the corruption guard for direct callers)."""
+        if (self.slot_tokens is not None
+                and resident_tokens > self.slot_tokens):
+            raise SlotCapacityExceeded(
+                f"owner {owner}: {resident_tokens} tokens > slot ring "
+                f"capacity {self.slot_tokens} (ring wrap would clobber "
+                f"live positions)")
+        self._alloc_to(self._tables[owner],
+                       self.pages_needed(resident_tokens))
+
+    def _alloc_to(self, bt: BlockTable, n_pages: int) -> None:
+        while len(bt.pages) < n_pages:
+            if not self._free:
+                raise PageExhausted(
+                    f"pool empty growing owner {bt.owner} to "
+                    f"{n_pages} pages")
+            bt.pages.append(self._free.pop())
+
+    def release(self, owner: int) -> int:
+        """Free a retired request's pages + reservation; returns the
+        number of physical pages returned to the pool."""
+        bt = self._tables.pop(owner)
+        self._free.extend(reversed(bt.pages))
+        self._committed -= bt.reserved
+        return len(bt.pages)
+
+
+# ---------------------------------------------------------------------------
+# Device-row helpers (jitted; recompiled per row count, which only
+# walks 1..num_slots).  Stacked cache leaves are (L, B, ...) with the
+# slot/row dim at axis 1; idx leaves are (L, B) vs the one-row
+# prefill's (L,) — the one structural asymmetry the tree.maps key on.
+# ---------------------------------------------------------------------------
+
+
+def _stamp_idx(one, length):
+    """One-row prefill caches arrive with idx = padded prompt length
+    (the engine right-pads prompts to a compile bucket); stamp the TRUE
+    length so validity masking hides the padded garbage positions."""
+    return map_cache_nodes(
+        one, lambda n: n._replace(idx=jnp.full(
+            (n.idx.shape[0], 1), length, jnp.int32)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _first_row(one, length):
+    return _stamp_idx(one, length)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _append_row(big, one, length):
+    one = _stamp_idx(one, length)
+
+    def f(a, o):
+        return jnp.concatenate([a, o.astype(a.dtype)], axis=1)
+
+    return jax.tree.map(f, big, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_row(big, one, row, length):
+    # after _stamp_idx every leaf of `one` is (L, 1, ...) against the
+    # big tree's (L, B, ...) — idx included — so one update rule fits
+    one = _stamp_idx(one, length)
+
+    def f(a, o):
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, o.astype(a.dtype), row, axis=1)
+
+    return jax.tree.map(f, big, one)
+
+
+# public alias: the legacy Server merges prefilled rows with the same
+# helper (one source of the slot-write/idx-stamp semantics)
+write_row = _write_row
+
+
+@jax.jit
+def _swap_shrink(big, row):
+    """Move the last row into ``row`` and drop the last row — retiring
+    a finished slot from the decode batch (wasted-FLOP satellite).
+    Not donated: every output leaf is one row smaller than the input,
+    so the buffers could never be reused anyway."""
+
+    def f(a):
+        a = a.at[:, row].set(a[:, -1])
+        return jax.lax.slice_in_dim(a, 0, a.shape[1] - 1, axis=1)
+
+    return jax.tree.map(f, big)
+
+
+class PagedKVCache:
+    """Per-slot device cache rows + lengths, governed by a
+    ``PageAllocator`` (see module docstring).  ``rows[i]`` is the
+    owner id (request rid) resident in device row i, or None for a
+    released row awaiting refill/shrink within an engine step."""
+
+    def __init__(self, cfg, max_len: int, num_slots: int,
+                 page_size: int = PAGE_SIZE,
+                 num_pages: int | None = None):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_slots = num_slots
+        self.slot_tokens = cache_len(cfg, max_len)    # ring capacity C
+        self.ring = self.slot_tokens < max_len        # window arch
+        slot_pages = pages_for(self.slot_tokens, page_size)
+        if num_pages is None:
+            num_pages = num_slots * slot_pages        # fully backed
+        self.allocator = PageAllocator(
+            num_pages, page_size,
+            # windowed rings wrap by design — growth clamps instead of
+            # raising; non-windowed rows raise before corruption
+            slot_tokens=None if self.ring else self.slot_tokens)
+        self._ring_clamp = self.slot_tokens
+        self.caches = None          # stacked device tree, rows = len(rows)
+        self.rows: list[int | None] = []
+        self.lengths: list[int] = []
+
+    # -- admission -----------------------------------------------------
+    def _resident(self, n_tokens: int) -> int:
+        return min(n_tokens, self._ring_clamp)
+
+    def can_admit(self, total_tokens: int) -> bool:
+        """A slot (fresh row or released row awaiting refill) AND a
+        page reservation are both available."""
+        has_slot = len(self.rows) < self.num_slots or None in self.rows
+        return has_slot and self.allocator.can_admit(
+            self._resident(total_tokens))
+
+    def append(self, owner: int, one, length: int,
+               total_tokens: int) -> int:
+        """Admit ``owner`` into a NEW device row from its one-row
+        prefill caches; returns the row index."""
+        assert len(self.rows) < self.num_slots
+        self.allocator.admit(owner, self._resident(length),
+                             self._resident(total_tokens))
+        if self.caches is None or not self.rows:
+            self.caches = _first_row(one, jnp.int32(length))
+        else:
+            self.caches = _append_row(self.caches, one,
+                                      jnp.int32(length))
+        self.rows.append(owner)
+        self.lengths.append(length)
+        return len(self.rows) - 1
+
+    def refill(self, row: int, owner: int, one, length: int,
+               total_tokens: int) -> None:
+        """Admit ``owner`` into a released row in place (continuous
+        batching's steady-state: retire + refill without resizing)."""
+        assert self.rows[row] is None, "refill requires a released row"
+        self.allocator.admit(owner, self._resident(length),
+                             self._resident(total_tokens))
+        self.caches = _write_row(self.caches, one, jnp.int32(row),
+                                 jnp.int32(length))
+        self.rows[row] = owner
+        self.lengths[row] = length
+
+    # -- retirement ----------------------------------------------------
+    def release(self, row: int) -> None:
+        """Free the row's pages (request finished).  The row must then
+        be ``refill``ed or ``shrink``ed before the next decode."""
+        self.allocator.release(self.rows[row])
+        self.rows[row] = None
+
+    def shrink(self, row: int) -> None:
+        """Drop a released row from the decode batch (swap-with-last)."""
+        assert self.rows[row] is None
+        last = len(self.rows) - 1
+        if last == 0:
+            self.caches = None
+        else:
+            self.caches = _swap_shrink(self.caches, jnp.int32(row))
+            self.rows[row] = self.rows[last]
+            self.lengths[row] = self.lengths[last]
+        self.rows.pop()
+        self.lengths.pop()
+
+    # -- decode bookkeeping --------------------------------------------
+    def advance(self) -> None:
+        """Mirror one decode step: every resident row appended one
+        token (the device-side ``idx`` vector advanced inside the
+        decode graph); grow page backing across boundaries."""
+        for i, owner in enumerate(self.rows):
+            assert owner is not None, "decode ran with a released row"
+            self.lengths[i] += 1
+            self.allocator.grow(owner, self._resident(self.lengths[i]))

@@ -1,0 +1,135 @@
+"""Request admission + slot lifecycle for the paged serving engine
+(docs/continuous-batching.md).
+
+Host-side and model-free by design: the scheduler owns the FIFO
+queue, request state transitions (QUEUED -> RUNNING -> FINISHED),
+stop conditions (EOS token / ``max_new`` budget) and per-request
+latency metrics (TTFT = submit -> first token, TPOT = mean inter-token
+gap after the first).  The engine asks *whether* the head of the
+queue fits (``PageAllocator.can_admit`` — page-exhaustion
+backpressure keeps it queued, head-of-line FIFO: a large stuck
+request is not overtaken) and tells the scheduler *what happened*
+(``on_token``); everything jax-shaped lives in ``engine``/
+``paged_cache``.  That split keeps refill order, retirement and
+backpressure unit-testable without building a model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from collections import deque
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``out`` accumulates generated token
+    ids (the first is produced by prefill); timestamps feed the
+    TTFT/TPOT metrics."""
+
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    eos_id: int | None = None
+    out: list = dataclasses.field(default_factory=list)
+    state: RequestState = RequestState.QUEUED
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_last: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    @property
+    def ttft(self) -> float | None:
+        """Time to first token (s): submit -> first generated token."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> float | None:
+        """Mean time per output token (s) after the first."""
+        if self.t_first is None or self.t_last is None or len(self.out) < 2:
+            return None
+        return (self.t_last - self.t_first) / (len(self.out) - 1)
+
+
+def hit_stop(req: Request, token: int) -> bool:
+    """THE stop rule (one source of truth — the paged scheduler and
+    the legacy Server both consult it): EOS token, or the ``max_new``
+    budget spent by the token just appended to ``req.out``."""
+    return ((req.eos_id is not None and int(token) == req.eos_id)
+            or len(req.out) >= req.max_new)
+
+
+class Scheduler:
+    """FIFO admission + retirement bookkeeping (see module docstring).
+    ``clock`` is injectable for deterministic unit tests."""
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.queue: deque[Request] = deque()
+        self.all: list[Request] = []
+
+    def submit(self, requests) -> None:
+        now = self.clock()
+        for req in requests:
+            assert req.max_new >= 1, "a request must generate >= 1 token"
+            req.state = RequestState.QUEUED
+            req.t_submit = now
+            self.queue.append(req)
+            self.all.append(req)
+
+    def peek(self) -> Request | None:
+        """Head of the FIFO queue (next admission candidate), or None."""
+        return self.queue[0] if self.queue else None
+
+    def pop(self) -> Request:
+        """Commit the head to a slot (engine prefills it next)."""
+        req = self.queue.popleft()
+        req.state = RequestState.RUNNING
+        return req
+
+    def on_token(self, req: Request, token: int) -> bool:
+        """Record one generated token; flips the request to FINISHED on
+        EOS or when the ``max_new`` budget is spent.  Returns done."""
+        now = self.clock()
+        req.out.append(int(token))
+        if req.t_first is None:
+            req.t_first = now
+        req.t_last = now
+        if hit_stop(req, token):
+            req.state = RequestState.FINISHED
+        return req.done
+
+    # -- metrics -------------------------------------------------------
+    def summary(self) -> dict:
+        """Aggregate serving metrics over every finished request."""
+        done = [r for r in self.all if r.done]
+        toks = sum(len(r.out) for r in done)
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        span = (max((r.t_last for r in done), default=0.0)
+                - min((r.t_submit for r in done), default=0.0))
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "tok_per_s": toks / span if span > 0 else float("nan"),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "mean_tpot_s": float(np.mean(tpots)) if tpots else float("nan"),
+        }

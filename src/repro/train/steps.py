@@ -315,19 +315,30 @@ def _wrap_serve(params, mask, scales):
 def make_prefill_step(cfg, max_len: int, scales=None):
     """``scales`` (from ``serve_weight_scales``) threads pre-computed
     per-tensor weight scales through; None falls back to in-step (jit)
-    scaling — the training-eval behavior."""
+    scaling — the training-eval behavior.
+
+    The built step takes an optional third argument ``last`` — the
+    index of the logits position to return (int32 scalar).  The
+    serving engine right-pads prompts to a length bucket so prefill
+    compiles once per bucket instead of once per prompt length; the
+    causally-correct last-token logits then sit at the true prompt
+    length - 1, not at -1 (docs/continuous-batching.md).  ``None``
+    (the default) keeps the historical behavior: logits[:, -1:]."""
     defs = model_defs(cfg)
     mask = quant_mask_tree(defs)
     qcfg = cfg.quant
 
-    def prefill_step(params, batch):
+    def prefill_step(params, batch, last=None):
         qp = _wrap_serve(params, mask, scales)
         b = (batch["tokens"].shape[0] if "tokens" in batch
              else batch["embeds"].shape[0])
         caches = init_caches(cfg, b, max_len)
         logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
                                     mode="prefill")
-        return logits[:, -1:], caches
+        if last is None:
+            return logits[:, -1:], caches
+        return jax.lax.dynamic_slice_in_dim(logits, last, 1,
+                                            axis=1), caches
 
     return prefill_step
 

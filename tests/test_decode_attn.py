@@ -73,6 +73,33 @@ def test_ref_vs_interpret_parity(arch, max_len, n_written, kv_dtype):
     assert outs["ref"].dtype == jnp.float32
 
 
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+def test_per_slot_n_valid_vector(kv_dtype):
+    """The per-(batch) ``n_valid`` vector (continuous-batching
+    engine): rows at different depths in ONE launch must be bitwise
+    identical to per-row scalar calls, on both backends."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
+        kv_cache_dtype=kv_dtype)
+    b = 3
+    cache = _build_cache(cfg, b, 96, 60)
+    q = _q(cfg, b)
+    nv = jnp.asarray([13, 60, 37], jnp.int32)    # per-slot depths
+    outs = {bk: dispatch.decode_attention(
+        q, cache.k, cache.v, cache.k_scale, cache.v_scale, nv,
+        backend=bk) for bk in ("ref", "interpret")}
+    assert jnp.array_equal(outs["ref"], outs["interpret"]), \
+        float(jnp.abs(outs["ref"] - outs["interpret"]).max())
+    # each row == the scalar-n_valid call on that row alone
+    for bi in range(b):
+        sl = lambda a: None if a is None else a[bi:bi + 1]
+        for bk in ("ref", "interpret"):
+            solo = dispatch.decode_attention(
+                q[bi:bi + 1], sl(cache.k), sl(cache.v),
+                sl(cache.k_scale), sl(cache.v_scale),
+                jnp.int32(int(nv[bi])), backend=bk)
+            assert jnp.array_equal(solo[0], outs[bk][bi]), (bk, bi)
+
+
 def test_gqa_head_grouping_semantics():
     """Against an independent f64 oracle (repeat kv heads, plain
     softmax) — validates the grouping convention itself, not just

@@ -1,0 +1,375 @@
+"""Paged-KV continuous-batching engine contract
+(docs/continuous-batching.md):
+
+- mixed-depth parity: N requests with different prompt lengths served
+  concurrently through the paged engine produce token-for-token the
+  same outputs as serving each request alone — fp8 AND bf16 cache,
+  ref AND interpret (kernel) backends, dense AND windowed-ring archs;
+- the legacy (non-paged) Server is mixed-depth-correct too (the
+  shared-``idx`` clobber fix): refilled requests with different
+  prefill lengths leave incumbent slots' tokens unchanged;
+- scheduler unit tests: FIFO refill order, EOS/max_new retirement,
+  TTFT/TPOT stamps — model-free;
+- allocator unit tests: block-table accounting, page-exhaustion
+  backpressure and the raises-before-corruption guarantees;
+- finished slots are retired from the decode batch (the row count
+  shrinks at tail drain);
+- the paged decode jaxpr keeps the fused-kernel contract: zero
+  cache-sized dequant upcasts / dots with the per-slot ``n_valid``
+  vector.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.formats import BF16_CONFIG
+from repro.models.layers import init_tree
+from repro.models.transformer import model_defs
+from repro.serving import (
+    Engine,
+    PageAllocator,
+    PageExhausted,
+    Request,
+    Scheduler,
+    SlotCapacityExceeded,
+)
+
+# prompt lengths straddle the 16-token prefill bucket boundaries on
+# purpose: 6 and 11 share a bucket, 17 takes the next one
+MIXED_LENS = [6, 17, 11]
+
+
+def _requests(cfg, lens, max_new=4, seed=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab, size=n,
+                                        dtype=np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(lens)]
+
+
+def _solo_outputs(cfg, params, reqs, max_len):
+    outs = []
+    for r in reqs:
+        solo = Request(rid=1000 + r.rid, prompt=r.prompt,
+                       max_new=r.max_new)
+        Engine(cfg, params, num_slots=1, max_len=max_len).run(
+            [solo], log=None)
+        outs.append(solo.out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Mixed-depth parity — the acceptance contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_mixed_depth_parity(monkeypatch, kv_dtype, backend):
+    """Concurrent requests at different depths match per-request
+    single-slot serving token-for-token.  bf16 compute isolates the
+    cache/engine plumbing (the MOSS recipe's batch-global activation
+    amax couples rows by design — covered by the tolerance test
+    below); the fp8 cache quantizes per written position, so it is
+    row-independent and must stay exact too."""
+    monkeypatch.setenv("REPRO_KERNELS", backend)
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype=kv_dtype)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    reqs = _requests(cfg, MIXED_LENS)
+    Engine(cfg, params, num_slots=2, max_len=32).run(reqs, log=None)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    solo = _solo_outputs(cfg, params, reqs, max_len=32)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+def test_mixed_depth_parity_windowed_ring():
+    """Same contract on a sliding-window arch: per-slot ring wrap
+    (depth > window) must also be batch-composition-independent."""
+    cfg = get_config("h2o-danube-3-4b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16", window=16)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    # depths cross the 16-token window mid-decode
+    reqs = _requests(cfg, [12, 20, 7], max_new=6)
+    Engine(cfg, params, num_slots=2, max_len=40).run(reqs, log=None)
+    solo = _solo_outputs(cfg, params, reqs, max_len=40)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+def test_mixed_depth_parity_recurrent_arch():
+    """Recurrent state (RWKV6) integrates every prefill token, so the
+    engine must prefill those families at EXACT prompt length (no
+    bucket padding — padded zeros would corrupt the recurrence) and
+    still match solo serving token-for-token."""
+    cfg = get_config("rwkv6-3b", smoke=True).replace(quant=BF16_CONFIG)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=2, max_len=32)
+    assert eng.prompt_bucket == 1          # exact-length prefill
+    reqs = _requests(cfg, [6, 9, 11], max_new=4)
+    eng.run(reqs, log=None)
+    solo = _solo_outputs(cfg, params, reqs, max_len=32)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+@pytest.mark.slow
+def test_mixed_depth_parity_moe_and_mla():
+    """The engine drives the MoE dense-decode combine and the MLA
+    absorbed latent cache with per-slot depths too."""
+    for arch in ("phi3.5-moe-42b-a6.6b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch, smoke=True).replace(quant=BF16_CONFIG,
+                                                   kv_cache_dtype="bf16")
+        params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+        reqs = _requests(cfg, MIXED_LENS, max_new=3)
+        Engine(cfg, params, num_slots=2, max_len=32).run(reqs, log=None)
+        solo = _solo_outputs(cfg, params, reqs, max_len=32)
+        for r, expect in zip(reqs, solo):
+            assert r.out == expect, (arch, r.rid, r.out, expect)
+
+
+def test_mixed_depth_moss_recipe_tolerance():
+    """Under the MOSS serving default the level-1 activation amax is
+    batch-global, so concurrent serving may legitimately diverge from
+    solo serving after a few tokens — the engine must still complete
+    every request and agree on the (batch-independent) prefill
+    token."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    reqs = _requests(cfg, MIXED_LENS)
+    Engine(cfg, params, num_slots=2, max_len=32).run(reqs, log=None)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    solo = _solo_outputs(cfg, params, reqs, max_len=32)
+    for r, expect in zip(reqs, solo):
+        assert r.out[0] == expect[0], (r.rid, r.out, expect)
+
+
+# ---------------------------------------------------------------------------
+# Legacy (non-paged) Server: the shared-idx clobber fix
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_server_mixed_depth_correct():
+    """Refilling a slot with a SHORTER prompt than the incumbents used
+    to clobber the shared ring ``idx`` (dropping incumbent tail
+    tokens).  With per-slot lengths the legacy Server matches solo
+    serving token-for-token on mixed-length traces."""
+    from repro.launch.serve import Server
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    # slot 0 starts long (17); the refill (6) is shorter — the
+    # historical bug truncated the incumbent's depth to 6
+    reqs = _requests(cfg, [17, 11, 6, 14], max_new=5)
+    Server(cfg, params, batch_slots=2, max_len=32).run(
+        list(reqs), log=lambda *a: None)
+    assert all(r.done and len(r.out) == 5 for r in reqs)
+    for r in reqs:
+        solo = Request(rid=1000 + r.rid, prompt=r.prompt, max_new=5)
+        Server(cfg, params, batch_slots=1, max_len=32).run(
+            [solo], log=lambda *a: None)
+        assert r.out == solo.out, (r.rid, r.out, solo.out)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler units (model-free)
+# ---------------------------------------------------------------------------
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return clock
+
+
+def test_scheduler_fifo_refill_order():
+    sched = Scheduler(clock=_fake_clock())
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new=3)
+            for i in range(4)]
+    sched.submit(reqs)
+    assert sched.peek() is reqs[0]
+    assert [sched.pop().rid for _ in range(4)] == [0, 1, 2, 3]
+    assert sched.peek() is None
+
+
+def test_scheduler_retirement_and_metrics():
+    sched = Scheduler(clock=_fake_clock())
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), max_new=3,
+                  eos_id=7)
+    sched.submit([req])                       # t=1
+    sched.pop()
+    assert not sched.on_token(req, 5)         # t=2 (first token)
+    assert sched.on_token(req, 7)             # t=3: EOS retires early
+    assert req.done and req.out == [5, 7]
+    assert req.ttft == 1.0                    # submit t=1 -> first t=2
+    assert req.tpot == 1.0                    # one gap of 1s
+    # max_new retirement without EOS
+    req2 = Request(rid=1, prompt=np.zeros(4, np.int32), max_new=2)
+    sched.submit([req2])
+    sched.pop()
+    sched.on_token(req2, 1)
+    assert sched.on_token(req2, 2) and req2.done
+    s = sched.summary()
+    assert s["requests"] == 2 and s["tokens"] == 4
+
+
+def test_engine_eos_early_retirement():
+    """A request whose greedy continuation hits EOS stops early and
+    frees its slot for the queue."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    probe = _requests(cfg, [6], max_new=6)[0]
+    Engine(cfg, params, num_slots=1, max_len=32).run([probe], log=None)
+    eos = probe.out[2]       # force EOS at the 3rd generated token
+    req = Request(rid=10, prompt=probe.prompt, max_new=6, eos_id=eos)
+    eng = Engine(cfg, params, num_slots=1, max_len=32, eos_id=eos)
+    eng.run([req], log=None)
+    assert req.done and len(req.out) == 3 and req.out[-1] == eos
+    assert eng.kv.allocator.free_pages == eng.kv.allocator.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Page allocator units
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_accounting():
+    al = PageAllocator(num_pages=8, page_size=4, slot_tokens=32)
+    bt = al.admit(owner=1, prompt_tokens=5, total_tokens=13)
+    assert len(bt.pages) == 2            # ceil(5/4) allocated now
+    assert bt.reserved == 4              # ceil(13/4) committed
+    assert al.committed_pages == 4 and al.free_pages == 6
+    al.grow(1, 9)                        # crosses into page 3
+    assert len(al.table(1).pages) == 3
+    al.grow(1, 9)                        # idempotent within a page
+    assert len(al.table(1).pages) == 3
+    assert al.can_admit(16) and not al.can_admit(17)
+    assert al.release(1) == 3
+    assert al.free_pages == 8 and al.committed_pages == 0
+
+
+def test_page_exhaustion_raises_before_corruption():
+    al = PageAllocator(num_pages=4, page_size=4, slot_tokens=32)
+    al.admit(owner=1, prompt_tokens=8, total_tokens=12)   # reserves 3
+    assert not al.can_admit(8)           # 2 more pages don't fit
+    with pytest.raises(PageExhausted):
+        al.admit(owner=2, prompt_tokens=8, total_tokens=8)
+    # slot ring capacity: growing past C must raise, not wrap-clobber
+    with pytest.raises(SlotCapacityExceeded):
+        al.grow(1, 33)
+    al.release(1)
+    al.admit(owner=2, prompt_tokens=8, total_tokens=8)    # now fits
+
+
+def test_engine_page_backpressure_completes():
+    """A pool smaller than slots*capacity throttles admissions (head
+    of queue waits for pages) but every request still completes."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    reqs = _requests(cfg, [12, 12, 12, 12], max_new=3)
+    # each request reserves ceil((12+3-1)/8)=2 pages; a 2-page pool
+    # forces strictly serial admission despite 2 slots
+    eng = Engine(cfg, params, num_slots=2, max_len=32, page_size=8,
+                 num_pages=2)
+    eng.run(reqs, log=None)
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    assert eng.kv.allocator.free_pages == 2
+    solo = _solo_outputs(cfg, params, reqs, max_len=32)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect
+
+
+def test_engine_rejects_over_capacity_request():
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=1, max_len=16)
+    bad = Request(rid=0, prompt=np.zeros(14, np.int32), max_new=8)
+    with pytest.raises(SlotCapacityExceeded):
+        eng.submit([bad])
+    # a request that fits its slot but can NEVER fit the page pool is
+    # rejected at submit (head-of-line FIFO would otherwise livelock)
+    eng2 = Engine(cfg, params, num_slots=1, max_len=64, page_size=16,
+                  num_pages=2)
+    too_big = Request(rid=1, prompt=np.zeros(40, np.int32), max_new=8)
+    with pytest.raises(PageExhausted):
+        eng2.submit([too_big])
+
+
+# ---------------------------------------------------------------------------
+# Retirement shrinks the decode batch (wasted-FLOP satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_finished_slots_leave_decode_batch():
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    reqs = _requests(cfg, [8, 8], max_new=2) \
+        + _requests(cfg, [8], max_new=8, rid0=2)
+    eng = Engine(cfg, params, num_slots=3, max_len=32)
+    eng.submit(reqs)
+    rows_seen = []
+    while eng.sched.queue or eng.kv.rows:
+        eng.step()
+        rows_seen.append(len(eng.kv.rows))
+    assert all(r.done for r in reqs)
+    # the two short requests retire while the long one keeps decoding:
+    # the decode batch must shrink to a single row, then to zero
+    assert rows_seen[0] == 3 and 1 in rows_seen
+    assert eng.kv.caches is None and eng.kv.rows == []
+
+
+# ---------------------------------------------------------------------------
+# The fused-kernel decode contract survives the per-slot generalization
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_jaxpr_keeps_kernel_contract(monkeypatch):
+    """The per-slot decode jaxpr (vector idx / n_valid) still contains
+    ZERO cache-sized fp8 dequant upcasts and ZERO cache-sized dots on
+    the kernel path (core/introspect.py counters)."""
+    from repro.core.introspect import (
+        count_dot_general_over,
+        count_fp8_dequant_upcasts,
+        count_primitive,
+        kv_cache_slice_sizes,
+    )
+    from repro.train.steps import make_decode_step
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True)   # fp8 cache default
+    assert cfg.kv_cache_dtype == "fp8"
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=2, max_len=16)
+    eng.submit(_requests(cfg, [6, 9], max_new=4))
+    eng.step()                       # both admitted, one decode ran
+    caches = eng.kv.caches
+    tok1 = jnp.zeros((2, 1), jnp.int32)
+    sizes = kv_cache_slice_sizes(cfg, 2, 16)
+
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    monkeypatch.delenv("REPRO_DECODE_ATTN", raising=False)
+    jx_k = jax.make_jaxpr(make_decode_step(cfg, scales=eng.scales))(
+        eng.params, caches, tok1)
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "einsum")
+    jx_e = jax.make_jaxpr(make_decode_step(cfg, scales=eng.scales))(
+        eng.params, caches, tok1)
+
+    assert count_fp8_dequant_upcasts(jx_e, sizes) > 0
+    assert count_dot_general_over(jx_e, sizes) > 0
+    assert count_fp8_dequant_upcasts(jx_k, sizes) == 0
+    assert count_dot_general_over(jx_k, sizes) == 0
+    assert count_primitive(jx_k, "pallas_call") > \
+        count_primitive(jx_e, "pallas_call")
