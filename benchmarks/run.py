@@ -524,6 +524,74 @@ def bench_serve_continuous(arch: str = "phi3-mini-3.8b"):
         f"_trace_{len(lens)}reqs_mixed_{min(lens)}to{max(lens)}")
 
 
+# ---------------------------------------------------------------------------
+# Prefix caching: a shared-system-prompt trace (every request repeats
+# the same page-aligned prefix) served with the copy-on-write prefix
+# cache vs cold (REPRO_PREFIX_CACHE-off equivalent).  CPU wall clock
+# is emulation; the structural columns — prefill tokens skipped,
+# physical pages shared, peak pool pages, CoW copies — carry the
+# mechanism (docs/paged-attention.md).
+# ---------------------------------------------------------------------------
+
+
+def bench_serve_prefix(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.serving import Engine, Request
+
+    cfg = get_config(arch, smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # smoke scale of the 16-request/512-token-system-prompt scenario:
+    # 8 requests sharing a 64-token (4-page) prefix + short distinct
+    # tails, 4 slots
+    n_reqs, prefix_tokens, max_new, slots, max_len = 8, 64, 6, 4, 96
+    tails = [5, 8, 3, 7, 4, 6, 2, 8]
+
+    def trace(rid0, prefix):
+        return [Request(rid=rid0 + i,
+                        prompt=np.concatenate(
+                            [prefix, rng.integers(0, cfg.vocab, size=n,
+                                                  dtype=np.int32)]),
+                        max_new=max_new)
+                for i, n in enumerate(tails[:n_reqs])]
+
+    stats = {}
+    for tag in ("shared", "cold"):
+        eng = Engine(cfg, params, slots, max_len=max_len,
+                     prefix_cache=(tag == "shared"))
+        for run in ("warmup", "timed"):
+            # warmup pays the jit compiles on a DIFFERENT prefix (no
+            # cross-run hits); timed serves the shared-prompt trace
+            prefix = rng.integers(0, cfg.vocab, size=prefix_tokens,
+                                  dtype=np.int32)
+            reqs = trace(0 if run == "warmup" else 100, prefix)
+            skipped0 = eng.prefill_tokens_skipped
+            shared0 = eng.pages_shared
+            hits0 = eng.prefix_hits
+            t0 = time.perf_counter()
+            eng.run(reqs, log=None)
+            dt = time.perf_counter() - t0
+            eng.prune_finished()
+        toks = sum(len(r.out) for r in reqs)
+        stats[tag] = (dt / toks * 1e6, toks / dt, eng,
+                      eng.prefill_tokens_skipped - skipped0,
+                      eng.pages_shared - shared0,
+                      eng.prefix_hits - hits0)
+    us_s, tps_s, eng_s, skipped, shared, hits = stats["shared"]
+    us_c, tps_c = stats["cold"][:2]
+    row("serve_prefix_shared_vs_cold", us_s,
+        f"tok_s_{tps_s:.1f}_cold_tok_s_{tps_c:.1f}"
+        f"_cold_us_per_tok_{us_c:.1f}"
+        f"_prefill_tokens_skipped_{skipped}"
+        f"_pages_shared_{shared}"
+        f"_prefix_hits_{hits}"
+        f"_cow_copies_{eng_s.kv.cow_copies}"
+        f"_peak_pool_pages_{eng_s.kv.allocator.peak_used}"
+        f"_trace_{n_reqs}reqs_prefix_{prefix_tokens}tok")
+
+
 def _write_json(path: str, rows=None) -> None:
     import json
 
@@ -556,6 +624,7 @@ def main(argv=None) -> None:
         bench_serve_prequant()
         bench_decode_attn()
         bench_serve_continuous()
+        bench_serve_prefix()
         _write_json(args.json)
         # serving / decode-attention rows also land in their own
         # artifacts (consumed by benchmarks/report.py --trajectory
@@ -576,6 +645,7 @@ def main(argv=None) -> None:
     bench_serve_prequant()
     bench_decode_attn()
     bench_serve_continuous()
+    bench_serve_prefix()
     if args.json:
         _write_json(args.json)
 

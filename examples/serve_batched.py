@@ -2,7 +2,10 @@
 a request queue with mixed prompt lengths — the fp8-at-rest serving
 defaults: build-time pre-quantized weights (PrequantParams), the fp8
 KV cache, the fused decode-attention kernel, and per-slot depths with
-block-table page accounting (docs/continuous-batching.md).
+floating-page block tables (docs/continuous-batching.md).  A second
+wave shares a system prompt: its page-aligned prefix is stored once
+and served copy-on-write, skipping the repeat prefills
+(docs/paged-attention.md).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -57,6 +60,35 @@ def main():
     s = engine.stats()
     print(f"mean TTFT {1e3 * s['mean_ttft_s']:.1f} ms | "
           f"mean TPOT {1e3 * s['mean_tpot_s']:.1f} ms")
+
+    # -- shared-system-prompt wave: the prefix-caching path ------------
+    system_prompt = rng.integers(0, cfg.vocab, size=32, dtype=np.int32)
+    wave = [
+        Request(rid=100 + i,
+                prompt=np.concatenate(
+                    [system_prompt,
+                     rng.integers(0, cfg.vocab,
+                                  size=int(rng.integers(2, 8)),
+                                  dtype=np.int32)]),
+                max_new=8)
+        for i in range(6)
+    ]
+    print(f"\nshared-prefix wave: {len(wave)} requests repeating a "
+          f"{len(system_prompt)}-token system prompt")
+    before = engine.prefill_calls
+    done = engine.run(wave)
+    assert all(r.done for r in done) and len(done) == len(wave)
+    s = engine.stats()
+    hits = [r for r in wave if r.prefix_pages > 0]
+    # the first wave request prefills the system prompt; every later
+    # one maps its pages copy-on-write and skips that prefill
+    assert len(hits) == len(wave) - 1, \
+        [(r.rid, r.prefix_pages) for r in wave]
+    assert engine.prefill_calls - before == 1
+    print(f"prefix hits {len(hits)}/{len(wave)} | prefill tokens "
+          f"skipped {s['prefill_tokens_skipped']} | pages shared "
+          f"{s['pages_shared']} | CoW copies {s['cow_copies']} | "
+          f"peak pool pages {s['peak_pool_pages']}")
 
 
 if __name__ == "__main__":

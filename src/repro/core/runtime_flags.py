@@ -90,6 +90,41 @@ def serve_paged() -> bool:
     return os.environ.get("REPRO_SERVE_PAGED", "1").strip() != "0"
 
 
+# Paged-engine page placement (see repro.serving.paged_cache and
+# docs/paged-attention.md):
+#   "float"    — true floating pages: one global page pool, per-slot
+#                block tables gathered inside the decode kernel,
+#                free-list allocator with refcounts + copy-on-write
+#                prefix sharing (the default where supported)
+#   "identity" — PR5 behavior: block tables are identity-mapped onto
+#                per-slot contiguous cache rows (A/B fallback; also
+#                what unsupported families — MLA/ssm/hybrid/windowed —
+#                silently take)
+PAGED_PLACEMENTS = ("float", "identity")
+
+
+def paged_placement() -> str:
+    """Active page placement: ``REPRO_PAGED_PLACEMENT`` env override,
+    else floating pages."""
+    env = os.environ.get("REPRO_PAGED_PLACEMENT", "").strip()
+    if env:
+        if env not in PAGED_PLACEMENTS:
+            raise ValueError(
+                f"REPRO_PAGED_PLACEMENT={env!r}: expected one of "
+                f"{PAGED_PLACEMENTS}")
+        return env
+    return "float"
+
+
+def serve_prefix_cache() -> bool:
+    """Whether the floating-page engine hashes page-aligned prompt
+    prefixes and maps hits copy-on-write onto the shared physical
+    pages (docs/paged-attention.md).  REPRO_PREFIX_CACHE=0 disables
+    (every request prefills cold); meaningless under identity
+    placement."""
+    return os.environ.get("REPRO_PREFIX_CACHE", "1").strip() != "0"
+
+
 # Decode-attention path (see repro.models.attention._decode_attention
 # and repro.kernels.dispatch.decode_attention):
 #   "kernel" — route through the kernel dispatch: the fused Pallas

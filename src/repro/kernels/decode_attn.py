@@ -51,6 +51,27 @@ Alignment is CALLER-owned only for G (pad to ≥ 8 rows); C and Dh are
 taken as-is — the trailing partial C block is masked in-kernel (scores
 to NEG_INF, garbage V rows zeroed) so the cache is never padded or
 copied in HBM.
+
+Floating-page variant (``decode_attn_paged_pallas``)
+----------------------------------------------------
+The serving engine's floating-page pool (docs/paged-attention.md)
+stores K/V as ``(P, KV, T, Dh)`` — P physical pages of T tokens each,
+shared by every slot — and a per-slot block table maps logical page j
+of batch row b to an arbitrary physical row.  The block table rides in
+as a SECOND scalar-prefetch operand ``(B, pages_per_slot) int32``
+right after ``n_valid``, and the K/V/scale index maps read it:
+
+  block index (bi, ki, pi)  ->  (block_table[bi, pi], ki, 0, 0)
+
+so the gather happens in the DMA schedule — each grid step streams one
+physical ``(T, Dh)`` page tile into VMEM and nothing cache-sized is
+ever copied or materialized contiguously in HBM.  Grid is
+(B, KV, pages_per_slot); per-page scores / V tiles / v_scales
+accumulate into VMEM scratch and the LAST page step runs the exact
+masked softmax in the same operation order as the contiguous
+single-block path above, so paged-vs-contiguous decode is
+bitwise-identical given identical page contents
+(tests/test_paged_attn.py).
 """
 
 from __future__ import annotations
@@ -222,3 +243,139 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(nv, *args)
+
+
+def _paged_decode_kernel(nv_ref, bt_ref, q_ref, k_ref, v_ref, *rest,
+                         n_p: int, t: int, sm_scale: float,
+                         quantized: bool, op_dtype):
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest[:3]
+        s_acc, v_acc, vs_acc = rest[3:]
+    else:
+        o_ref = rest[0]
+        s_acc, v_acc = rest[1:]
+    del bt_ref          # consumed by the index maps, not the body
+    pi = pl.program_id(2)
+    c_true = n_p * t
+
+    # identical operand casts / op order to the contiguous single-block
+    # kernel: bf16 values (fp8 casts are exact in bf16), f32 accumulation
+    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (Gp, Dh)
+    k = k_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (t, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                          # (Gp, t)
+    if quantized:
+        s = s * ks_ref[0, 0][None, :]
+
+    # validity: logical slot pi*T + o of row b is live iff it is below
+    # min(n_valid[b], C).  Pages past the frontier hold zeros (fresh
+    # pool) or a retired request's stale-but-finite values — masked
+    # scores underflow to weight 0 exactly, and V rows / v_scales are
+    # zeroed so the ref oracle's 0·finite contributions match bitwise.
+    slot = pi * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    nv = jnp.minimum(nv_ref[pl.program_id(0)], c_true)
+    valid = slot < nv
+    s = jnp.where(valid, s, NEG_INF)
+    v = v_ref[0, 0].astype(jnp.float32)                       # (t, Dh)
+    v = jnp.where(valid.reshape(t, 1), v, 0.0)
+
+    # stream this page's columns into the (Gp, C) / (C, Dh) scratch;
+    # every column is freshly written once per (bi, ki) sweep, so no
+    # init step is needed
+    s_acc[:, pl.ds(pi * t, t)] = s
+    v_acc[pl.ds(pi * t, t), :] = v
+    if quantized:
+        vs = jnp.where(valid, vs_ref[0, 0][None, :], 0.0)
+        vs_acc[:, pl.ds(pi * t, t)] = jnp.broadcast_to(
+            vs, (vs_acc.shape[0], t))
+
+    @pl.when(pi == n_p - 1)
+    def _done():
+        # exact masked softmax over the gathered row, same operation
+        # order as the single-block kernel and the einsum reference
+        # (max -> exp -> sum -> divide -> ×v_scale -> dot)
+        s_full = s_acc[...]
+        m = jnp.max(s_full, axis=-1, keepdims=True)
+        p = jnp.exp(s_full - m)
+        w = p / jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            w = w * vs_acc[:1, :]
+        o_ref[0, 0] = jax.lax.dot_general(
+            w.astype(jnp.bfloat16).astype(op_dtype),
+            v_acc[...].astype(op_dtype),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def decode_attn_paged_pallas(q, k, v, k_scale, v_scale, n_valid,
+                             block_table, *, sm_scale: float,
+                             interpret: bool = False):
+    """Fused decode attention over the floating-page pool.
+
+    q: (B, KV, Gp, Dh) with Gp % 8 == 0 (dispatch pads); k/v:
+    (P, KV, T, Dh) e4m3|bf16 page-pool payloads; k_scale/v_scale:
+    (P, KV, T) f32 or both None (bf16 cache); n_valid: (B,) int32 and
+    block_table: (B, pages_per_slot) int32 — BOTH scalar-prefetch
+    (SMEM), in that order.  Logical tokens [j*T, (j+1)*T) of row b
+    live in physical page block_table[b, j]; the index maps gather
+    them page tile by page tile (see module docstring).  Returns
+    (B, KV, Gp, Dh) f32."""
+    from repro.core.runtime_flags import mm_operand_dtype
+
+    b, kvh, gp, dh = q.shape
+    p_pool, kvh_k, t = k.shape[:3]
+    assert k.shape == v.shape == (p_pool, kvh, t, dh), (q.shape, k.shape)
+    assert gp % 8 == 0, f"G={gp} not padded to the 8-row sublane tile"
+    n_p = block_table.shape[1]
+    assert block_table.shape == (b, n_p)
+    quantized = k_scale is not None
+    if quantized:
+        assert k_scale.shape == v_scale.shape == (p_pool, kvh, t)
+    c_true = n_p * t
+    grid = (b, kvh, n_p)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gp, dh),
+                     lambda bi, ki, pi, nv, bt: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, 1, t, dh),
+                     lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0, 0)),
+        pl.BlockSpec((1, 1, t, dh),
+                     lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0, 0)),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, t),
+                         lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0)),
+            pl.BlockSpec((1, 1, t),
+                         lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0)),
+        ]
+        args += [k_scale, v_scale]
+    scratch = [
+        pltpu.VMEM((gp, c_true), jnp.float32),   # gathered scores
+        pltpu.VMEM((c_true, dh), jnp.float32),   # gathered V (masked)
+    ]
+    if quantized:
+        scratch.append(pltpu.VMEM((8, c_true), jnp.float32))  # v_scales
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, gp, dh),
+                               lambda bi, ki, pi, nv, bt: (bi, ki, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    nv = jnp.broadcast_to(n_valid.astype(jnp.int32).reshape(-1), (b,))
+    bt = block_table.astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, n_p=n_p, t=t,
+                          sm_scale=sm_scale, quantized=quantized,
+                          op_dtype=mm_operand_dtype()),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dh), jnp.float32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(nv, bt, *args)

@@ -39,7 +39,7 @@ from repro.core import quant as Q
 from repro.core.quant import MxQ, PerGroupQ, PerTensorQ
 from repro.core.runtime_flags import KERNEL_BACKENDS, kernel_backend
 from . import ref
-from .decode_attn import decode_attn_pallas
+from .decode_attn import decode_attn_paged_pallas, decode_attn_pallas
 from .group_gemm import GROUP, group_gemm_pallas
 from .moe_gmm import moe_dw_gemm_pallas, moe_gmm_pallas
 from .mx_bwd import mx_dw_gemm_pallas
@@ -324,6 +324,48 @@ def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
     gp = _ceil_to(max(g, 8), 8)
     out = decode_attn_pallas(
         _pad_to(q, 2, gp), k, v, k_scale, v_scale, nv,
+        sm_scale=sm_scale, interpret=backend == "interpret")
+    return out[:, :, :g]
+
+
+def decode_attention_paged(q, k, v, k_scale, v_scale, n_valid,
+                           block_table, *,
+                           sm_scale: float | None = None,
+                           backend: str | None = None) -> jax.Array:
+    """Single-step decode attention over the floating page pool.
+
+    Same contract as :func:`decode_attention` except the cache arrives
+    as a GLOBAL page pool — ``k`` / ``v`` are (P, KV, T, Dh) physical
+    pages (e4m3 with (P, KV, T) f32 scales, or bf16 with scales None)
+    shared by every slot, and ``block_table`` (B, NP) int32 maps
+    logical page j of batch row b to physical row
+    ``block_table[b, j]``.  ``n_valid`` must be per-slot (B,) (the
+    engine's length vector); a scalar broadcasts as before.  Logical
+    capacity is C = NP·T; validity is ``slot < min(n_valid[b], C)``.
+    Returns (B, KV, G, Dh) f32.
+
+    The ref path gathers the pages into the contiguous layout and
+    reuses the contiguous oracle (bitwise-equal by construction); the
+    kernel path threads ``block_table`` in as a second scalar-prefetch
+    operand so its index maps perform the same gather inside the DMA
+    schedule — nothing cache-sized is materialized in HBM
+    (docs/paged-attention.md)."""
+    backend = _resolve(backend)
+    b, kvh, g, dh = q.shape
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)
+    assert nv.shape[0] in (1, b), \
+        f"n_valid shape {nv.shape}: expected () / (1,) / ({b},)"
+    nv = jnp.broadcast_to(nv, (b,))
+    bt = jnp.asarray(block_table, jnp.int32)
+    assert bt.shape[0] == b, (bt.shape, b)
+    if backend == "ref":
+        return ref.decode_attn_paged_ref(q, k, v, k_scale, v_scale, nv,
+                                         bt, sm_scale=sm_scale)
+    gp = _ceil_to(max(g, 8), 8)
+    out = decode_attn_paged_pallas(
+        _pad_to(q, 2, gp), k, v, k_scale, v_scale, nv, bt,
         sm_scale=sm_scale, interpret=backend == "interpret")
     return out[:, :, :g]
 

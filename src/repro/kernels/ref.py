@@ -101,6 +101,41 @@ def decode_attn_ref(q, k, v, k_scale, v_scale, n_valid, *,
     return einsum("bkgt,bktd->bkgd", w, v, out_dtype=jnp.float32)
 
 
+def gather_pages(pool, block_table) -> jax.Array:
+    """Gather a contiguous per-slot view out of the floating page pool.
+
+    pool: (P, KV, T, ...) physical pages (payload (P, KV, T, Dh) or
+    scale (P, KV, T)); block_table: (B, NP) int32 — logical page j of
+    slot b lives in physical row ``block_table[b, j]``.  Returns
+    (B, KV, NP·T, ...): the same layout the contiguous decode oracle
+    consumes, so paged ref == contiguous ref by construction."""
+    b, n_p = block_table.shape
+    g = pool[block_table]                 # (B, NP, KV, T, ...)
+    g = jnp.moveaxis(g, 2, 1)             # (B, KV, NP, T, ...)
+    return g.reshape(b, g.shape[1], n_p * pool.shape[2],
+                     *pool.shape[3:])
+
+
+def decode_attn_paged_ref(q, k, v, k_scale, v_scale, n_valid,
+                          block_table, *, sm_scale: float) -> jax.Array:
+    """Floating-page decode oracle: gather each slot's pages into the
+    contiguous (B, KV, C, ·) layout, then delegate to the contiguous
+    oracle — paged-vs-contiguous parity is bitwise BY CONSTRUCTION on
+    this backend.
+
+    q: (B, KV, G, Dh); k/v: (P, KV, T, Dh) page-pool payloads;
+    k_scale/v_scale: (P, KV, T) f32 or both None; n_valid: (B,) int32
+    logical depths; block_table: (B, NP) int32.  Returns
+    (B, KV, G, Dh) f32."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    kg = gather_pages(k, bt)
+    vg = gather_pages(v, bt)
+    ksg = None if k_scale is None else gather_pages(k_scale, bt)
+    vsg = None if v_scale is None else gather_pages(v_scale, bt)
+    return decode_attn_ref(q, kg, vg, ksg, vsg, n_valid,
+                           sm_scale=sm_scale)
+
+
 def mx_quant_ref(x, s_global, fmt: str = "e4m3"):
     """Two-level quantize given a precomputed global scale."""
     q = Q.quant_mx(x, micro_group=32, fmt=fmt, global_scale=s_global)

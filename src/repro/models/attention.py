@@ -64,13 +64,31 @@ class KVCache(NamedTuple):
     p % C; appends of S ≥ C positions keep the last C (prefill of a
     window cache), shorter appends write ``[idx % C, idx % C + S)``
     contiguously — the serving engine never wraps a multi-token append
-    mid-stream (prefill starts at idx=0; decode appends S=1)."""
+    mid-stream (prefill starts at idx=0; decode appends S=1).
+
+    Floating-page pool variant (``block_table`` not None —
+    docs/paged-attention.md): the payload leaves change meaning to a
+    GLOBAL pool shared by every slot —
+
+      k, v          (P, KV, T, Dh)  P physical pages of T tokens
+      k/v_scale     (P, KV, T)      per-(token, kv-head) scales (fp8)
+      idx           (B,)            per-slot logical depth, as before
+      block_table   (B, NP)         int32: logical page j of slot b is
+                                    physical row ``block_table[b, j]``
+                                    (NP = pages_per_slot = C/T)
+
+    Decode attention gathers pages through the block table
+    (``dispatch.decode_attention_paged``); a decode append writes one
+    position into page ``block_table[b, idx[b]//T]`` at offset
+    ``idx[b] % T``.  Ring semantics don't apply (the engine gates
+    float mode to non-windowed families)."""
 
     k: jax.Array
     v: jax.Array
     k_scale: jax.Array | None
     v_scale: jax.Array | None
     idx: jax.Array
+    block_table: jax.Array | None = None
 
 
 def _quant_kv(x):
@@ -138,6 +156,30 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
                    k_scale=None, v_scale=None, idx=idx)
 
 
+def init_page_pool(cfg, num_pages: int, pages_per_slot: int,
+                   batch: int, page_size: int,
+                   dtype=jnp.bfloat16) -> KVCache:
+    """Builds ONE layer's floating-page pool cache (pre-stacking):
+    payload (P, KV, T, Dh) + scales (P, KV, T) shared by every slot,
+    per-slot depth ``idx`` (B,) and ``block_table`` (B, NP) int32.
+    Storage dtype follows ``resolve_kv_cache_dtype`` exactly like
+    ``init_cache``.  Physical page contents are zero-initialized; a
+    page is only ever read through a block table whose slot depth
+    covers it, so stale retired-page bytes are masked out by the
+    kernel's validity mask regardless."""
+    shape = (num_pages, cfg.n_kv, page_size, cfg.head_dim)
+    idx = jnp.zeros((batch,), jnp.int32)
+    bt = jnp.zeros((batch, pages_per_slot), jnp.int32)
+    if resolve_kv_cache_dtype(cfg) == "fp8":
+        return KVCache(k=jnp.zeros(shape, jnp.float8_e4m3fn),
+                       v=jnp.zeros(shape, jnp.float8_e4m3fn),
+                       k_scale=jnp.zeros(shape[:-1], jnp.float32),
+                       v_scale=jnp.zeros(shape[:-1], jnp.float32),
+                       idx=idx, block_table=bt)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   k_scale=None, v_scale=None, idx=idx, block_table=bt)
+
+
 def cache_logical(cfg) -> KVCache:
     """Logical sharding axes for ONE layer's cache (pre-stacking).
     The seq dim carries the model axis when kv_heads can't (resolve_spec
@@ -184,9 +226,15 @@ def _decode_attention(cfg, q, cache: KVCache, n_valid):
     g = h // kvh
     qg = q.reshape(b, kvh, g, dh)
     backend = "ref" if decode_attn_path() == "einsum" else None
-    out = dispatch.decode_attention(
-        qg, cache.k, cache.v, cache.k_scale, cache.v_scale, n_valid,
-        sm_scale=dh ** -0.5, backend=backend)
+    if cache.block_table is not None:
+        out = dispatch.decode_attention_paged(
+            qg, cache.k, cache.v, cache.k_scale, cache.v_scale,
+            n_valid, cache.block_table, sm_scale=dh ** -0.5,
+            backend=backend)
+    else:
+        out = dispatch.decode_attention(
+            qg, cache.k, cache.v, cache.k_scale, cache.v_scale, n_valid,
+            sm_scale=dh ** -0.5, backend=backend)
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
@@ -206,6 +254,32 @@ def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
         v_new, vs_new = _quant_kv(v_new)
     c = cache.k.shape[2]
     s_new = k_new.shape[2]
+
+    if cache.block_table is not None:
+        # floating-page pool: one decode token lands in physical page
+        # block_table[b, idx[b] // T] at in-page offset idx[b] % T.
+        # The engine guarantees the target page is writable (refcount
+        # 1) via copy-on-write BEFORE the step, so a scatter here never
+        # aliases a shared page.  Advanced indices (page, off) with the
+        # interior ':' put the batch dim first → (B, KV[, Dh]) updates.
+        assert cache.idx.ndim == 1 and s_new == 1, \
+            "paged cache appends decode one token per slot"
+        t = cache.k.shape[2]
+        pos = cache.idx
+        page = jnp.take_along_axis(
+            cache.block_table, (pos // t)[:, None], axis=1)[:, 0]
+        off = pos % t
+
+        def put(pool, upd):
+            return pool.at[page, :, off].set(upd.astype(pool.dtype))
+
+        return cache._replace(
+            k=put(cache.k, k_new[:, :, 0]),
+            v=put(cache.v, v_new[:, :, 0]),
+            k_scale=put(cache.k_scale, ks_new[:, :, 0]) if fp8 else None,
+            v_scale=put(cache.v_scale, vs_new[:, :, 0]) if fp8 else None,
+            idx=cache.idx + 1)
+
     if s_new >= c:
         # keep the last C positions (prefill of a window cache);
         # ring layout: position p lives in slot p % C.  Never reached

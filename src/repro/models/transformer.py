@@ -305,6 +305,37 @@ def init_caches(cfg, batch: int, max_len: int, per_slot: bool = False):
     return caches
 
 
+def paged_decode_supported(cfg, max_len: int, page_size: int) -> bool:
+    """True iff this (cfg, max_len) can decode from a floating page
+    pool (docs/paged-attention.md): per-head KVCache families only
+    (MLA's latent cache and the ssm/hybrid recurrent states have no
+    page structure), no window/ring semantics (the pool append writes
+    ``idx // T`` directly), and C a whole number of pages."""
+    if cfg.family not in ("dense", "audio", "vlm", "moe"):
+        return False
+    c = attn_mod.cache_len(cfg, max_len)
+    return c == max_len and c % page_size == 0
+
+
+def init_paged_pools(cfg, max_len: int, num_pages: int,
+                     page_size: int) -> dict:
+    """Stacked floating-page pool caches for every segment — the
+    serving engine's float-placement variant of ``init_caches``.
+    Each array leaf gains the leading layers axis exactly like
+    ``init_caches``; per-slot ``idx`` / ``block_table`` leaves start
+    at batch 0 (the engine restamps them from host state every step).
+    Requires ``paged_decode_supported``."""
+    assert paged_decode_supported(cfg, max_len, page_size)
+    pps = attn_mod.cache_len(cfg, max_len) // page_size
+    caches = {}
+    for seg in build_segments(cfg):
+        one = attn_mod.init_page_pool(cfg, num_pages, pps, 0, page_size)
+        caches[seg.name] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (seg.n, *x.shape)).copy()
+            if hasattr(x, "shape") else x, one)
+    return caches
+
+
 def forward(cfg, qcfg: QuantConfig, params, batch: dict,
             caches=None, mode: str = "train"):
     """Returns (logits, new_caches, aux_loss).

@@ -1,41 +1,48 @@
 """Paged-KV continuous-batching serving engine
-(docs/continuous-batching.md).
+(docs/continuous-batching.md, docs/paged-attention.md).
 
-- ``paged_cache`` — block-table page accounting (``PageAllocator``)
-  over the per-slot device cache rows (``PagedKVCache``);
+- ``paged_cache`` — free-list page allocator with refcounts +
+  copy-on-write prefix sharing (``PageAllocator``), the floating
+  global page pool (``FloatingPageCache``) and the identity-placement
+  per-slot rows (``PagedKVCache``);
 - ``scheduler`` — FIFO admission, EOS/max_new retirement, TTFT/TPOT
   metrics (``Scheduler``, ``Request``);
-- ``engine`` — prefill-into-slot + batched decode over the per-slot
-  length vector (``Engine``).
+- ``engine`` — prefill-into-slot (or prefix-hit replay) + batched
+  decode over the per-slot length vector (``Engine``).
 
 ``launch/serve.py`` is the CLI over this package; the legacy
 contiguous-ring ``Server`` there is the ``REPRO_SERVE_PAGED=0``
 fallback.
 """
 
-from .engine import Engine, greedy_sample, prepare_weights
+from .engine import Engine, PrefixPlan, greedy_sample, prepare_weights
 from .paged_cache import (
     PAGE_SIZE,
     BlockTable,
+    FloatingPageCache,
     PageAllocator,
     PagedCacheError,
     PagedKVCache,
     PageExhausted,
     SlotCapacityExceeded,
+    page_keys,
 )
 from .scheduler import Request, RequestState, Scheduler
 
 __all__ = [
     "Engine",
+    "PrefixPlan",
     "greedy_sample",
     "prepare_weights",
     "PAGE_SIZE",
     "BlockTable",
+    "FloatingPageCache",
     "PageAllocator",
     "PagedCacheError",
     "PagedKVCache",
     "PageExhausted",
     "SlotCapacityExceeded",
+    "page_keys",
     "Request",
     "RequestState",
     "Scheduler",

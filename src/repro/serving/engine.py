@@ -4,26 +4,53 @@ layer between the model's prefill/decode step functions and the
 
 One engine ``step()``:
 
-  1. retire finished requests: free their pages, then either refill
-     the row in place from the queue (steady state) or swap-shrink it
-     out of the decode batch (tail drain — finished slots never feed
-     another decode step);
-  2. admit queued requests while slots and pages allow (page
-     exhaustion = backpressure, the request stays queued);
+  1. retire finished requests: unreference their pages, then either
+     refill the row in place from the queue (steady state) or
+     swap-shrink it out of the decode batch (tail drain — finished
+     slots never feed another decode step);
+  2. admit queued requests while slots and pages allow — admission is
+     ACTUAL free-pool accounting (outstanding private reservations vs
+     allocatable pages, ``PageAllocator.can_admit``), not a
+     worst-case contiguous-row count; page exhaustion = backpressure,
+     the request stays queued;
   3. one batched decode over the resident rows — every row active,
      each at its own depth via the per-slot length vector that flows
-     ``KVCache.idx (B,)`` -> per-slot RoPE positions -> per-slot ring
+     ``KVCache.idx (B,)`` -> per-slot RoPE positions -> per-slot
      writes -> the decode-attention kernel's ``n_valid`` scalar-
      prefetch vector.
 
+Page placement (``REPRO_PAGED_PLACEMENT``, docs/paged-attention.md):
+where the family supports it (per-head KV cache, no window, C a
+whole number of pages) the cache is a ``FloatingPageCache`` — one
+global page pool, per-slot block tables threaded into the decode
+kernel as a scalar-prefetch operand.  Other families (MLA latent,
+recurrent state, windowed rings) and the ``identity`` override keep
+the PR5 per-slot contiguous rows.
+
+Prefix caching (float placement only, ``REPRO_PREFIX_CACHE``): at
+admission the head request's page-aligned prompt prefix is hashed
+(``page_keys`` — chained, so key j covers tokens [0, (j+1)*T)) and
+looked up; on a hit the request maps the shared physical pages
+copy-on-write, SKIPS the prefill of those chunks entirely, and the
+engine replays only the remaining prompt tokens through ordinary
+batched decode steps (samples discarded until the last prompt token
+is fed — its sample is the request's first output token and stamps
+TTFT).  A cold request's full prompt pages are registered after its
+prefill insert; a prefix-hit request's additional full pages register
+when its replay completes.  Shared pages are never written in place:
+``FloatingPageCache.prepare_decode`` copies-before-write
+(refcount > 1 or hash-registered), bounded at ONE CoW per request
+(only a fully-page-aligned full hit ever writes into a shared page).
+
 Prefill runs one request at a time (B=1) into a fresh cache and the
-result row is merged into the batch — so a request's tokens are
-bitwise independent of whichever other requests happen to be resident
-(the mixed-depth parity contract, asserted in
-tests/test_paged_serving.py).  Prompts are right-padded to a compile
-bucket (``prompt_bucket``) so prefill compiles once per bucket, not
-once per prompt length; the true length is what gets stamped into the
-merged row's ``idx``, so padded garbage positions are never attended.
+result row is merged into the batch (identity) or scattered into
+pool pages (float) — so a request's tokens are bitwise independent
+of whichever other requests happen to be resident (the mixed-depth
+parity contract, asserted in tests/test_paged_serving.py).  Prompts
+are right-padded to a compile bucket (``prompt_bucket``) so prefill
+compiles once per bucket, not once per prompt length; the true
+length is what gets stamped into the merged row's ``idx``, so padded
+garbage positions are never attended.
 
 Weights are pre-quantized at build exactly like the legacy Server
 (``PrequantParams``; ``REPRO_SERVE_PREQUANT=0`` falls back to cached
@@ -32,13 +59,20 @@ scales).
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.runtime_flags import serve_prequant
+from repro.core.runtime_flags import (
+    paged_placement,
+    serve_prefix_cache,
+    serve_prequant,
+)
+from repro.models.transformer import paged_decode_supported
 from repro.train.steps import (
     make_decode_step,
     make_prefill_step,
@@ -48,9 +82,11 @@ from repro.train.steps import (
 
 from .paged_cache import (
     PAGE_SIZE,
+    FloatingPageCache,
     PagedKVCache,
     PageExhausted,
     SlotCapacityExceeded,
+    page_keys,
 )
 from .scheduler import Request, Scheduler
 
@@ -74,6 +110,26 @@ def greedy_sample(logits):
     return jnp.argmax(logits[:, -1], axis=-1)
 
 
+@dataclasses.dataclass
+class PrefixPlan:
+    """Admission-time prefix-cache decision for one request.
+
+    ``keys``        chained page hashes of every FULL prompt page
+    ``pages``       physical pages hit (longest registered prefix run,
+                    clamped to the prompt's full pages) — empty = cold
+    ``replay_from`` first prompt position fed through decode instead
+                    of prefill: ``min(n_shared*T, prompt_len - 1)``
+                    (a FULL hit still replays the last prompt token,
+                    whose sample is the first output)
+    ``cow_slack``   1 when the replay write lands inside a shared page
+                    (full page-aligned hit), else 0 — reserved so the
+                    copy-on-write can always allocate"""
+    keys: list
+    pages: list
+    replay_from: int
+    cow_slack: int
+
+
 class Engine:
     """Paged-KV continuous-batching engine (see module docstring)."""
 
@@ -81,7 +137,8 @@ class Engine:
                  page_size: int = PAGE_SIZE,
                  num_pages: int | None = None,
                  prompt_bucket: int = PROMPT_BUCKET,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None,
+                 prefix_cache: bool | None = None):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"serving engine drives token models; {cfg.name} has "
@@ -102,8 +159,29 @@ class Engine:
                                                  scales=self.scales))
         self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
                               donate_argnums=(1,))
-        self.kv = PagedKVCache(cfg, max_len, num_slots,
-                               page_size=page_size, num_pages=num_pages)
+        self.float_pages = (paged_placement() == "float"
+                            and paged_decode_supported(cfg, max_len,
+                                                       page_size))
+        if self.float_pages:
+            self.kv = FloatingPageCache(cfg, max_len, num_slots,
+                                        page_size=page_size,
+                                        num_pages=num_pages)
+        else:
+            self.kv = PagedKVCache(cfg, max_len, num_slots,
+                                   page_size=page_size,
+                                   num_pages=num_pages)
+        self.prefix_cache = (self.float_pages
+                             and (serve_prefix_cache()
+                                  if prefix_cache is None
+                                  else prefix_cache))
+        # prompt tokens still owed to decode-step replay per prefix-hit
+        # request, and the page keys to register when replay completes
+        self._replay: dict[int, deque] = {}
+        self._replay_keys: dict[int, list] = {}
+        self.prefill_calls = 0
+        self.prefill_tokens_skipped = 0
+        self.prefix_hits = 0
+        self.pages_shared = 0
         self.sched = Scheduler()
         self.requests: dict[int, Request] = {}
 
@@ -150,16 +228,74 @@ class Engine:
         logits, one = self.prefill(self.params, {"tokens":
                                                  jnp.asarray(toks)},
                                    jnp.int32(min(n, toks.shape[1]) - 1))
+        self.prefill_calls += 1
         self.sched.on_token(req, int(greedy_sample(logits)[0]))
         return one
 
-    def _admissible_head(self) -> Request | None:
+    def _prefix_plan(self, req: Request) -> PrefixPlan | None:
+        """Look the request's page-aligned prompt prefix up in the
+        hash map (None when prefix caching is off)."""
+        if not self.prefix_cache:
+            return None
+        t = self.kv.page_size
+        keys = page_keys(req.prompt, t)
+        pages = self.kv.allocator.lookup(keys)
+        n_shared = len(pages)
+        if n_shared == 0:
+            return PrefixPlan(keys=keys, pages=[], replay_from=0,
+                              cow_slack=0)
+        replay_from = min(n_shared * t, req.prompt_len - 1)
+        cow_slack = 1 if n_shared * t >= req.prompt_len else 0
+        return PrefixPlan(keys=keys, pages=pages,
+                          replay_from=replay_from, cow_slack=cow_slack)
+
+    def _admissible_head(self):
+        """(head request, prefix plan) when the queue head fits under
+        the pool's actual free-page accounting, else None."""
         head = self.sched.peek()
         if head is None:
             return None
-        if not self.kv.can_admit(self._total_tokens(head)):
-            return None       # page backpressure: stays queued
-        return head
+        plan = self._prefix_plan(head)
+        total = self._total_tokens(head)
+        if plan is not None and plan.pages:
+            ok = self.kv.can_admit(total, shared=plan.pages,
+                                   cow_slack=plan.cow_slack)
+            if not ok and self.kv.can_admit(total):
+                # the hit needs MORE headroom than a cold admit (page
+                # revival + CoW slack, e.g. a minimal pool): serve it
+                # cold rather than livelock the FIFO head forever
+                plan = PrefixPlan(keys=plan.keys, pages=[],
+                                  replay_from=0, cow_slack=0)
+                ok = True
+        else:
+            ok = self.kv.can_admit(total)
+        return (head, plan) if ok else None   # else: stays queued
+
+    def _admit(self, req: Request, plan: PrefixPlan | None,
+               row: int | None = None) -> None:
+        """Admit one popped request — prefix-hit (map shared pages,
+        queue the prompt-tail replay, NO prefill) or cold (B=1
+        prefill, insert, register prompt hashes)."""
+        total = self._total_tokens(req)
+        if plan is not None and plan.pages:
+            self.kv.admit_shared(req.rid, plan.pages, plan.replay_from,
+                                 total, plan.cow_slack, row=row)
+            self._replay[req.rid] = deque(
+                int(tok) for tok in req.prompt[plan.replay_from:])
+            self._replay_keys[req.rid] = plan.keys
+            self.prefix_hits += 1
+            self.prefill_tokens_skipped += plan.replay_from
+            self.pages_shared += len(plan.pages)
+            req.prefix_pages = len(plan.pages)
+            req.prefill_skipped = plan.replay_from
+            return
+        one = self._prefill_request(req)
+        if row is None:
+            self.kv.append(req.rid, one, req.prompt_len, total)
+        else:
+            self.kv.refill(row, req.rid, one, req.prompt_len, total)
+        if plan is not None:
+            self.kv.register_prompt(req.rid, plan.keys)
 
     # -- the engine step -----------------------------------------------
     def step(self) -> None:
@@ -176,25 +312,25 @@ class Engine:
                 continue
             if owner is not None:
                 self.kv.release(row)
-            if self._admissible_head() is not None:
-                req = self.sched.pop()
-                one = self._prefill_request(req)
-                self.kv.refill(row, req.rid, one, req.prompt_len,
-                               self._total_tokens(req))
-                # the refill may itself already be done (max_new == 1
-                # or instant EOS): the loop re-checks this row
+            head = self._admissible_head()
+            if head is not None:
+                req, plan = head
+                self.sched.pop()
+                self._admit(req, plan, row=row)
+                # a cold refill may itself already be done (max_new ==
+                # 1 or instant EOS): the loop re-checks this row
             else:
                 self.kv.shrink(row)
                 # the swapped-in last row is re-checked at this index
 
     def _admit_new_rows(self):
         while len(self.kv.rows) < self.num_slots:
-            if self._admissible_head() is None:
+            head = self._admissible_head()
+            if head is None:
                 break
-            req = self.sched.pop()
-            one = self._prefill_request(req)
-            self.kv.append(req.rid, one, req.prompt_len,
-                           self._total_tokens(req))
+            req, plan = head
+            self.sched.pop()
+            self._admit(req, plan)
             if self.requests[req.rid].done:       # instant finish
                 self._retire_and_refill()
 
@@ -202,13 +338,36 @@ class Engine:
         rows = self.kv.rows
         if not rows:
             return
-        last = np.array([[self.requests[r].out[-1]] for r in rows],
-                        np.int32)
+        # feed: a replayed prompt token for prefix-hit rows still
+        # catching up, else the row's last sampled token
+        feed = np.zeros((len(rows), 1), np.int32)
+        for i, rid in enumerate(rows):
+            pending = self._replay.get(rid)
+            if pending:
+                feed[i, 0] = pending.popleft()
+            else:
+                feed[i, 0] = self.requests[rid].out[-1]
+        if self.float_pages:
+            # copy-on-write barrier + idx/block-table restamp: every
+            # row's write-target page must be private BEFORE the
+            # in-graph append
+            self.kv.prepare_decode()
         logits, self.kv.caches = self.decode(
-            self.params, self.kv.caches, jnp.asarray(last))
+            self.params, self.kv.caches, jnp.asarray(feed))
         self.kv.advance()
         nxt = np.asarray(greedy_sample(logits))
         for i, rid in enumerate(list(rows)):
+            if rid in self._replay:
+                if self._replay[rid]:
+                    continue      # mid-replay: the sample predicts a
+                                  # prompt token we already have
+                # the last prompt token was just fed: this sample is
+                # the request's FIRST output token (stamps TTFT), and
+                # the row's full prompt pages are now written —
+                # publish their hashes
+                del self._replay[rid]
+                self.kv.register_prompt(
+                    rid, self._replay_keys.pop(rid))
             self.sched.on_token(self.requests[rid], int(nxt[i]))
 
     # -- driver --------------------------------------------------------
@@ -244,7 +403,16 @@ class Engine:
         return done
 
     def stats(self) -> dict:
-        return self.sched.summary()
+        s = self.sched.summary()
+        s.update({
+            "prefill_calls": self.prefill_calls,
+            "prefix_hits": self.prefix_hits,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            "pages_shared": self.pages_shared,
+            "cow_copies": getattr(self.kv, "cow_copies", 0),
+            "peak_pool_pages": self.kv.allocator.peak_used,
+        })
+        return s
 
     def prune_finished(self) -> int:
         """Drop finished requests from the engine's history.  A

@@ -1,54 +1,91 @@
-"""Paged KV cache: block-table page accounting + the per-slot device
-cache it governs (docs/continuous-batching.md).
+"""Paged KV cache: free-list page allocator with refcounts +
+copy-on-write prefix sharing, and the two device-cache placements it
+governs (docs/paged-attention.md, docs/continuous-batching.md).
 
-Two layers, deliberately separate:
+Three layers, deliberately separate:
 
 ``PageAllocator`` (host-side bookkeeping)
-    A vLLM-style block-table allocator over a pool of fixed-size pages
-    (``page_size`` tokens each).  Admission reserves a request's
-    worst-case page count (prompt + max_new, clamped to the slot's
-    ring capacity) so decode can never run out mid-request — there is
-    no preemption in this engine, so reservation-based admission is
-    the no-corruption guarantee.  Physical pages are allocated lazily
-    as the sequence actually grows and freed on retirement.  The pool
-    may be smaller than ``num_slots`` full rows (over-committed slots
-    — the vLLM memory argument: mean sequence length < capacity), in
-    which case admission backpressure, not slot count, bounds
-    concurrency.
+    A vLLM-style allocator over a pool of fixed-size pages
+    (``page_size`` tokens each).  Pages are handed out from a free
+    list and carry a REFCOUNT: a physical page may back the same
+    logical page of several requests at once (prefix sharing).
+    Admission reserves each request's worst-case PRIVATE page count
+    (total pages minus the shared ones, plus at most one
+    copy-on-write slack page) so decode can never run out mid-request
+    — there is no preemption in this engine, so reservation-based
+    admission is the no-corruption guarantee.  Private pages are
+    allocated lazily as the sequence actually grows; on release every
+    page is unreferenced, and a refcount-0 page either returns to the
+    free list or — if it is registered in the prefix-hash map — parks
+    in an LRU "evictable" set: still addressable by future prefix
+    hits, reclaimed (hash entries dropped) only when the free list
+    runs dry.  ``free_pages`` counts both, because both are
+    allocatable.
 
-``PagedKVCache`` (device rows + lengths)
-    The device-side cache keeps the existing kv-head-major
-    ``(B, KV, C, Dh)`` payload + scale layout — one contiguous row
-    per slot — with the per-slot length vector (``KVCache.idx`` as a
-    ``(B,)`` vector) carrying each row's depth.  A slot's logical
-    page j therefore maps to byte range ``[j*page, (j+1)*page)`` of
-    its own row: the block table is real accounting over an
-    identity physical mapping.  Letting pages float across rows
-    (true non-contiguous placement) requires block-table indirection
-    inside the decode kernel and is the ROADMAP follow-up; every
-    interface here (admission, growth, release, exhaustion) is
-    already expressed in pages so that change stays below this API.
+    Refcount/CoW state machine of one physical page:
 
-    The row dimension is *dynamic*: admission appends a row, and
-    retiring a finished request removes its row (the last row is
-    swapped in, then the batch shrinks) — finished slots never feed
-    another decode step.  jit recompiles per row count; counts only
-    walk 1..num_slots so the compile set is bounded and reused across
-    the serving run.
+      free ──alloc──► private (rc=1, unhashed)
+      private ──register_hash──► shared-able (rc=1, hashed)
+      hashed ──prefix hit (_ref)──► shared (rc≥2)
+      any rc>0 ──_unref──► rc-1; at rc=0: evictable if hashed
+                                             else free list
+      evictable ──prefix hit (_ref)──► shared again (revived)
+      evictable ──LRU evict──► free (hash entries dropped)
+
+    A WRITE may only target a page with rc==1 that is NOT hashed;
+    ``ensure_writable`` enforces this by allocating a fresh private
+    page past the frontier and COPY-ON-WRITE-replacing a shared or
+    hashed page (the old page is unreferenced, the block-table entry
+    repointed — the device copy is the caller's job).
+
+``PagedKVCache`` (identity placement — the PR5 layout)
+    Device rows stay per-slot contiguous ``(B, KV, C, Dh)``; the block
+    table is real accounting over an identity physical mapping.  Kept
+    as the fallback for families the floating pool cannot serve
+    (MLA latent caches, recurrent states, windowed rings) and as the
+    ``REPRO_PAGED_PLACEMENT=identity`` A/B baseline.
+
+``FloatingPageCache`` (float placement — the default)
+    One GLOBAL page pool per layer, ``(P, KV, T, Dh)`` payload +
+    ``(P, KV, T)`` scales, shared by every slot; per-slot state is a
+    host block table restamped into the device ``idx (B,)`` /
+    ``block_table (B, NP)`` leaves before every decode.  Prefill
+    still runs per request into a contiguous one-row cache; its pages
+    are then scattered into the pool (``_pool_insert``).  Because the
+    pool payload is batch-independent, admission/retirement/refill
+    are pure host-list surgery — no device row copies — and two
+    requests whose block tables point at the same physical rows
+    genuinely share the bytes (the prefix-caching win: shared system
+    prompts are stored once and never re-prefilled).
+
+Prefix-hash scheme (``page_keys``): page j of a prompt is keyed by a
+CHAINED hash — ``h_j = hash((h_{j-1}, tokens[j*T:(j+1)*T]))`` with a
+fixed root sentinel — so a key identifies the entire prefix through
+page j, not just that page's tokens.  Only FULL prompt pages are ever
+registered (the frontier partial page still mutates); registration is
+first-writer-wins.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.attention import cache_len
-from repro.models.transformer import map_cache_nodes
+from repro.models.transformer import (
+    init_paged_pools,
+    map_cache_nodes,
+    paged_decode_supported,
+)
 
 PAGE_SIZE = 16
+
+_HASH_ROOT = "moss-prefix-root"
 
 
 class PagedCacheError(RuntimeError):
@@ -71,18 +108,42 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+def page_keys(tokens, page_size: int) -> list:
+    """Chained page-aligned prefix keys of a prompt: ``keys[j]``
+    identifies tokens [0, (j+1)*page_size) — page content AND its
+    whole prefix — so a block-table hit on key j is only possible
+    when every earlier page matched too.  Only full pages get keys
+    (``len(keys) == len(tokens) // page_size``)."""
+    toks = np.asarray(tokens)
+    keys, prev = [], _HASH_ROOT
+    for j in range(len(toks) // page_size):
+        chunk = tuple(int(t) for t in toks[j * page_size:
+                                           (j + 1) * page_size])
+        prev = hash((prev, chunk))
+        keys.append(prev)
+    return keys
+
+
 @dataclasses.dataclass
 class BlockTable:
     """One slot's logical->physical page map.  ``pages[j]`` is the
-    physical page id backing tokens [j*page_size, (j+1)*page_size)."""
+    physical page id backing tokens [j*page_size, (j+1)*page_size);
+    the leading ``shared0`` entries were mapped from prefix-hash hits
+    (refcounted, not owned), the rest are private.  ``reserved`` is
+    the worst-case PRIVATE page count admission committed to and
+    ``private`` how many of those have materialized — the allocator
+    asserts ``private <= reserved`` (reservation-overrun guard)."""
     owner: int
     pages: list[int] = dataclasses.field(default_factory=list)
-    reserved: int = 0          # worst-case pages admission committed to
+    reserved: int = 0
+    private: int = 0
+    shared0: int = 0
 
 
 class PageAllocator:
-    """Fixed-size-page pool accounting with reservation-based
-    admission (see module docstring)."""
+    """Free-list + refcount page-pool accounting with
+    reservation-based admission and prefix-hash sharing (see module
+    docstring)."""
 
     def __init__(self, num_pages: int, page_size: int = PAGE_SIZE,
                  slot_tokens: int | None = None):
@@ -92,17 +153,36 @@ class PageAllocator:
         # per-slot ring capacity in tokens; None = unbounded rows
         self.slot_tokens = slot_tokens
         self._free = list(range(num_pages - 1, -1, -1))
+        self._refcount = [0] * num_pages
+        # refcount-0 pages kept addressable for prefix hits, oldest
+        # first (LRU eviction order)
+        self._evictable: OrderedDict[int, None] = OrderedDict()
+        self._hash_to_page: dict = {}
+        self._page_hash: dict[int, object] = {}
         self._tables: dict[int, BlockTable] = {}
-        self._committed = 0        # sum of outstanding reservations
+        # sum over residents of (reserved - private): pages promised
+        # but not yet materialized — the admission headroom term
+        self._outstanding = 0
+        self.peak_used = 0
 
     # -- introspection -------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Allocatable pages: the free list plus the evictable
+        (refcount-0 hashed) set."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def cached_pages(self) -> int:
+        """Refcount-0 pages retained only for future prefix hits."""
+        return len(self._evictable)
 
     @property
     def committed_pages(self) -> int:
-        return self._committed
+        return sum(bt.reserved for bt in self._tables.values())
+
+    def refcount(self, page: int) -> int:
+        return self._refcount[page]
 
     def table(self, owner: int) -> BlockTable:
         return self._tables[owner]
@@ -115,36 +195,130 @@ class PageAllocator:
     def pages_needed(self, n_tokens: int) -> int:
         return pages_for(self._clamp(n_tokens), self.page_size)
 
-    # -- lifecycle -----------------------------------------------------
-    def can_admit(self, total_tokens: int) -> bool:
-        """Whether a request whose lifetime resident size is
-        ``total_tokens`` fits under the outstanding reservations."""
-        return (self._committed + self.pages_needed(total_tokens)
-                <= self.num_pages)
+    def _note_used(self) -> None:
+        self.peak_used = max(self.peak_used,
+                             self.num_pages - self.free_pages)
 
-    def admit(self, owner: int, prompt_tokens: int,
-              total_tokens: int) -> BlockTable:
-        """Reserve ``total_tokens`` worth of pages and allocate the
-        prompt's pages now.  Raises ``PageExhausted`` when the pool
+    # -- prefix hash map -----------------------------------------------
+    def lookup(self, keys: list) -> list[int]:
+        """Longest registered prefix run: physical pages for
+        ``keys[0..k)`` where k is the first miss."""
+        pages = []
+        for key in keys:
+            page = self._hash_to_page.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register_hash(self, page: int, key) -> bool:
+        """Publish ``page`` as the backing of prefix ``key``.
+        First-writer-wins: an already-taken key or an already-hashed
+        page is left alone (returns False)."""
+        if key in self._hash_to_page or page in self._page_hash:
+            return False
+        self._hash_to_page[key] = page
+        self._page_hash[page] = key
+        return True
+
+    # -- refcount plumbing ---------------------------------------------
+    def _ref(self, page: int) -> None:
+        if self._refcount[page] == 0:
+            # revive from the evictable set (hash entry survives)
+            self._evictable.pop(page)
+        self._refcount[page] += 1
+
+    def _unref(self, page: int) -> None:
+        assert self._refcount[page] > 0, \
+            f"double-free of page {page}"
+        self._refcount[page] -= 1
+        if self._refcount[page] == 0:
+            if page in self._page_hash:
+                self._evictable[page] = None     # newest at the end
+            else:
+                self._free.append(page)
+
+    def _drop_hash(self, page: int) -> None:
+        key = self._page_hash.pop(page, None)
+        if key is not None:
+            del self._hash_to_page[key]
+
+    def _alloc_page(self) -> int:
+        if self._free:
+            page = self._free.pop()
+        elif self._evictable:
+            # reclaim the least-recently-parked hashed page: its
+            # prefix entry dies with it
+            page, _ = self._evictable.popitem(last=False)
+            self._drop_hash(page)
+        else:
+            raise PageExhausted("page pool empty")
+        self._refcount[page] = 1
+        self._note_used()
+        return page
+
+    def _alloc_private(self, bt: BlockTable) -> int:
+        assert bt.private < bt.reserved, \
+            (f"owner {bt.owner}: private page {bt.private + 1} would "
+             f"overrun its reservation of {bt.reserved} (allocator "
+             f"leak / accounting bug)")
+        page = self._alloc_page()
+        bt.private += 1
+        self._outstanding -= 1
+        return page
+
+    # -- lifecycle -----------------------------------------------------
+    def _reservation(self, total_tokens: int, n_shared: int,
+                     cow_slack: int) -> int:
+        return max(self.pages_needed(total_tokens) - n_shared, 0) \
+            + cow_slack
+
+    def _revive_cost(self, shared) -> int:
+        # shared pages currently parked evictable leave the free pool
+        # on admit without consuming any reservation
+        return sum(1 for p in shared if self._refcount[p] == 0)
+
+    def can_admit(self, total_tokens: int, shared=(),
+                  cow_slack: int = 0) -> bool:
+        """Whether a request whose lifetime resident size is
+        ``total_tokens`` (of which ``len(shared)`` pages arrive via
+        prefix hits) fits: every outstanding promise plus this
+        request's private reservation plus the revival of its shared
+        pages must be covered by allocatable pages."""
+        need = self._reservation(total_tokens, len(shared), cow_slack)
+        return (self._outstanding + need + self._revive_cost(shared)
+                <= self.free_pages)
+
+    def admit(self, owner: int, prompt_tokens: int, total_tokens: int,
+              shared=(), cow_slack: int = 0) -> BlockTable:
+        """Reserve the request's worst-case private pages, map the
+        shared prefix pages (refcounted) and allocate the remaining
+        prompt pages now.  Raises ``PageExhausted`` when the pool
         cannot cover the reservation."""
         assert owner not in self._tables, f"owner {owner} already resident"
-        need = self.pages_needed(total_tokens)
-        if self._committed + need > self.num_pages:
+        need = self._reservation(total_tokens, len(shared), cow_slack)
+        if (self._outstanding + need + self._revive_cost(shared)
+                > self.free_pages):
             raise PageExhausted(
-                f"reservation of {need} pages for owner {owner} exceeds "
-                f"pool ({self._committed}/{self.num_pages} committed)")
-        bt = BlockTable(owner=owner, reserved=need)
+                f"reservation of {need} private pages for owner "
+                f"{owner} exceeds the pool ({self.free_pages} "
+                f"allocatable, {self._outstanding} outstanding)")
+        bt = BlockTable(owner=owner, reserved=need,
+                        shared0=len(shared))
+        for page in shared:
+            self._ref(page)
+            bt.pages.append(page)
+        self._note_used()
         self._tables[owner] = bt
-        self._committed += need
-        self._alloc_to(bt, self.pages_needed(prompt_tokens))
+        self._outstanding += need
+        self._grow_to(bt, self.pages_needed(prompt_tokens))
         return bt
 
     def grow(self, owner: int, resident_tokens: int) -> None:
-        """Back ``resident_tokens`` with physical pages (one decode
-        step usually crosses a page boundary every ``page_size``
-        steps).  Raises ``SlotCapacityExceeded`` past the slot ring
-        and ``PageExhausted`` if growth outruns the reservation into
-        an empty pool (impossible under reservation-based admission —
+        """Back ``resident_tokens`` with physical pages.  Raises
+        ``SlotCapacityExceeded`` past the slot ring and
+        ``PageExhausted`` if growth outruns the reservation into an
+        empty pool (impossible under reservation-based admission —
         kept as the corruption guard for direct callers)."""
         if (self.slot_tokens is not None
                 and resident_tokens > self.slot_tokens):
@@ -152,31 +326,59 @@ class PageAllocator:
                 f"owner {owner}: {resident_tokens} tokens > slot ring "
                 f"capacity {self.slot_tokens} (ring wrap would clobber "
                 f"live positions)")
-        self._alloc_to(self._tables[owner],
-                       self.pages_needed(resident_tokens))
+        self._grow_to(self._tables[owner],
+                      self.pages_needed(resident_tokens))
 
-    def _alloc_to(self, bt: BlockTable, n_pages: int) -> None:
+    def _grow_to(self, bt: BlockTable, n_pages: int) -> None:
         while len(bt.pages) < n_pages:
-            if not self._free:
-                raise PageExhausted(
-                    f"pool empty growing owner {bt.owner} to "
-                    f"{n_pages} pages")
-            bt.pages.append(self._free.pop())
+            bt.pages.append(self._alloc_private(bt))
+
+    def ensure_writable(self, owner: int,
+                        page_idx: int) -> tuple[str, int, int]:
+        """Make logical page ``page_idx`` of ``owner`` safe to write:
+
+          "fresh"  page_idx was one past the frontier — a private
+                   page was allocated and appended
+          "ok"     the page is private (rc==1, unhashed): in-place
+                   writes are safe
+          "cow"    the page was shared (rc>1) OR hash-registered: a
+                   private copy was allocated and the table entry
+                   repointed — the caller must device-copy
+                   old -> new before the write lands
+
+        Returns ``(kind, old_page, new_page)`` (equal except "cow").
+        Hash-registered pages CoW even at rc==1: their bytes are
+        advertised to future prefix hits and must stay pristine."""
+        bt = self._tables[owner]
+        if page_idx == len(bt.pages):
+            page = self._alloc_private(bt)
+            bt.pages.append(page)
+            return ("fresh", page, page)
+        old = bt.pages[page_idx]
+        if self._refcount[old] > 1 or old in self._page_hash:
+            new = self._alloc_private(bt)
+            bt.pages[page_idx] = new
+            self._unref(old)
+            return ("cow", old, new)
+        return ("ok", old, old)
 
     def release(self, owner: int) -> int:
-        """Free a retired request's pages + reservation; returns the
-        number of physical pages returned to the pool."""
+        """Unreference a retired request's pages and drop its
+        remaining reservation; returns the number of pages the table
+        held (shared pages may stay alive under other owners)."""
         bt = self._tables.pop(owner)
-        self._free.extend(reversed(bt.pages))
-        self._committed -= bt.reserved
+        for page in bt.pages:
+            self._unref(page)
+        self._outstanding -= bt.reserved - bt.private
         return len(bt.pages)
 
 
 # ---------------------------------------------------------------------------
-# Device-row helpers (jitted; recompiled per row count, which only
-# walks 1..num_slots).  Stacked cache leaves are (L, B, ...) with the
-# slot/row dim at axis 1; idx leaves are (L, B) vs the one-row
-# prefill's (L,) — the one structural asymmetry the tree.maps key on.
+# Identity-placement device-row helpers (jitted; recompiled per row
+# count, which only walks 1..num_slots).  Stacked cache leaves are
+# (L, B, ...) with the slot/row dim at axis 1; idx leaves are (L, B)
+# vs the one-row prefill's (L,) — the one structural asymmetry the
+# tree.maps key on.
 # ---------------------------------------------------------------------------
 
 
@@ -237,10 +439,11 @@ def _swap_shrink(big, row):
 
 
 class PagedKVCache:
-    """Per-slot device cache rows + lengths, governed by a
-    ``PageAllocator`` (see module docstring).  ``rows[i]`` is the
-    owner id (request rid) resident in device row i, or None for a
-    released row awaiting refill/shrink within an engine step."""
+    """Identity-placement device cache: per-slot contiguous rows +
+    lengths, governed by a ``PageAllocator`` (see module docstring).
+    ``rows[i]`` is the owner id (request rid) resident in device row
+    i, or None for a released row awaiting refill/shrink within an
+    engine step."""
 
     def __init__(self, cfg, max_len: int, num_slots: int,
                  page_size: int = PAGE_SIZE,
@@ -331,3 +534,241 @@ class PagedKVCache:
             assert owner is not None, "decode ran with a released row"
             self.lengths[i] += 1
             self.allocator.grow(owner, self._resident(self.lengths[i]))
+
+
+# ---------------------------------------------------------------------------
+# Floating-placement device helpers.  The pool payload is
+# batch-independent — only the idx/block_table leaves carry the slot
+# dim — so these jits recompile per (page-count, batch) geometry, both
+# bounded by pages_per_slot / num_slots.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("n_new",))
+def _pool_insert(pool, one, pages, n_new: int):
+    """Scatter the first ``n_new`` pages of a one-row prefill cache
+    into physical pool rows ``pages`` ((n_new,) int32).  Payload
+    leaves: pool (L, P, KV, T, ...), one (L, 1, KV, C, ...) with
+    C >= n_new*T — padded-bucket garbage past the true length rides
+    along and is masked by the slot depth, exactly like the identity
+    rows."""
+    t = pool.k.shape[3]
+
+    def scatter(buf, row):
+        r = row[:, 0, :, :n_new * t]
+        r = r.reshape(r.shape[0], r.shape[1], n_new, t, *r.shape[3:])
+        r = jnp.moveaxis(r, 2, 1)           # (L, n_new, KV, T, ...)
+        return buf.at[:, pages].set(r.astype(buf.dtype))
+
+    fp8 = pool.k_scale is not None
+    return pool._replace(
+        k=scatter(pool.k, one.k), v=scatter(pool.v, one.v),
+        k_scale=scatter(pool.k_scale, one.k_scale) if fp8 else None,
+        v_scale=scatter(pool.v_scale, one.v_scale) if fp8 else None)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_copy_page(pool, src, dst):
+    """Copy one physical page (all layers, payloads + scales):
+    the device half of copy-on-write."""
+
+    def cp(buf):
+        return buf.at[:, dst].set(buf[:, src])
+
+    fp8 = pool.k_scale is not None
+    return pool._replace(
+        k=cp(pool.k), v=cp(pool.v),
+        k_scale=cp(pool.k_scale) if fp8 else None,
+        v_scale=cp(pool.v_scale) if fp8 else None)
+
+
+class FloatingPageCache:
+    """Floating-placement device cache: one global page pool per
+    layer, host block tables restamped into the device leaves before
+    every decode (see module docstring).  API-compatible with
+    ``PagedKVCache`` from the engine's point of view (`rows`,
+    `lengths`, `caches`, admission/retirement verbs) plus the
+    float-only verbs ``admit_shared`` / ``prepare_decode`` /
+    ``register_prompt``."""
+
+    def __init__(self, cfg, max_len: int, num_slots: int,
+                 page_size: int = PAGE_SIZE,
+                 num_pages: int | None = None):
+        assert paged_decode_supported(cfg, max_len, page_size), \
+            (cfg.family, max_len, page_size)
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.slot_tokens = cache_len(cfg, max_len)    # == max_len
+        self.ring = False
+        self.pages_per_slot = self.slot_tokens // page_size
+        if num_pages is None:
+            num_pages = num_slots * self.pages_per_slot
+        self.allocator = PageAllocator(num_pages, page_size,
+                                       slot_tokens=self.slot_tokens)
+        self.num_pages = num_pages
+        self.cow_copies = 0
+        self.rows: list[int | None] = []
+        self.lengths: list[int] = []
+        self.caches = None
+        # pools are allocated once up front; `caches` is None while no
+        # request is resident (the engine's drained-state contract) and
+        # the pool tree parks here in between
+        self._stash = init_paged_pools(cfg, max_len, num_pages,
+                                       page_size)
+
+    # -- admission -----------------------------------------------------
+    def _resident(self, n_tokens: int) -> int:
+        return min(n_tokens, self.slot_tokens)
+
+    def can_admit(self, total_tokens: int, shared=(),
+                  cow_slack: int = 0) -> bool:
+        has_slot = len(self.rows) < self.num_slots or None in self.rows
+        return has_slot and self.allocator.can_admit(
+            self._resident(total_tokens), shared=shared,
+            cow_slack=cow_slack)
+
+    def _wake(self):
+        if self.caches is None:
+            self.caches, self._stash = self._stash, None
+
+    def _insert(self, owner: int, one) -> None:
+        """Scatter a cold prefill's pages into the pool."""
+        bt = self.allocator.table(owner)
+        pages = jnp.asarray(bt.pages, jnp.int32)
+        self._wake()
+        self.caches = {
+            name: _pool_insert(seg, one[name], pages, len(bt.pages))
+            if seg is not None else None
+            for name, seg in self.caches.items()}
+
+    def append(self, owner: int, one, length: int,
+               total_tokens: int) -> int:
+        """Admit a COLD request (prefilled one-row caches) into the
+        pool; the batch position is just the next host-list slot —
+        the pool payload has no row dim to grow."""
+        assert len(self.rows) < self.num_slots
+        self.allocator.admit(owner, length,
+                             self._resident(total_tokens))
+        self._insert(owner, one)
+        self.rows.append(owner)
+        self.lengths.append(length)
+        return len(self.rows) - 1
+
+    def refill(self, row: int, owner: int, one, length: int,
+               total_tokens: int) -> None:
+        assert self.rows[row] is None, "refill requires a released row"
+        self.allocator.admit(owner, length,
+                             self._resident(total_tokens))
+        self._insert(owner, one)
+        self.rows[row] = owner
+        self.lengths[row] = length
+
+    def admit_shared(self, owner: int, shared_pages: list[int],
+                     depth: int, total_tokens: int, cow_slack: int,
+                     row: int | None = None) -> int:
+        """Admit a PREFIX-HIT request: its leading pages map
+        copy-on-write onto ``shared_pages`` (no prefill ran — the
+        engine replays the remaining prompt tokens through decode
+        steps from ``depth``).  Returns the batch row."""
+        self.allocator.admit(owner, 0, self._resident(total_tokens),
+                             shared=shared_pages, cow_slack=cow_slack)
+        self._wake()
+        if row is None:
+            assert len(self.rows) < self.num_slots
+            self.rows.append(owner)
+            self.lengths.append(depth)
+            return len(self.rows) - 1
+        assert self.rows[row] is None
+        self.rows[row] = owner
+        self.lengths[row] = depth
+        return row
+
+    def register_prompt(self, owner: int, keys: list) -> int:
+        """Publish the owner's FULL prompt pages in the prefix-hash
+        map (first-writer-wins); returns how many registered."""
+        bt = self.allocator.table(owner)
+        n = 0
+        for j, key in enumerate(keys):
+            if j < len(bt.pages):
+                n += bool(self.allocator.register_hash(bt.pages[j],
+                                                       key))
+        return n
+
+    # -- retirement ----------------------------------------------------
+    def release(self, row: int) -> None:
+        self.allocator.release(self.rows[row])
+        self.rows[row] = None
+
+    def shrink(self, row: int) -> None:
+        """Drop a released row from the decode batch.  Pure host-list
+        surgery (swap-with-last): the pool payload is batch-
+        independent and the idx/block-table leaves are restamped
+        before the next decode anyway."""
+        assert self.rows[row] is None
+        last = len(self.rows) - 1
+        if last == 0:
+            self._stash, self.caches = self.caches, None
+        else:
+            self.rows[row] = self.rows[last]
+            self.lengths[row] = self.lengths[last]
+        self.rows.pop()
+        self.lengths.pop()
+
+    # -- decode bookkeeping --------------------------------------------
+    def prepare_decode(self) -> None:
+        """Pre-step barrier: make every row's write-target page
+        private (fresh past the frontier, copy-on-write out of shared
+        or hash-registered pages) and restamp the device idx /
+        block-table leaves from host state.  MUST run before each
+        decode step — the step's in-graph append assumes its target
+        page is exclusively owned."""
+        t = self.page_size
+        for i, owner in enumerate(self.rows):
+            assert owner is not None, "decode ran with a released row"
+            kind, src, dst = self.allocator.ensure_writable(
+                owner, self.lengths[i] // t)
+            if kind == "cow":
+                self.cow_copies += 1
+                s, d = jnp.int32(src), jnp.int32(dst)
+                self.caches = {
+                    name: _pool_copy_page(seg, s, d)
+                    if seg is not None else None
+                    for name, seg in self.caches.items()}
+        self._restamp()
+
+    def _restamp(self) -> None:
+        """Rebuild the (B,)-shaped idx and (B, NP)-shaped block-table
+        leaves (with the stacked layers axis in front) from the host
+        rows/lengths/tables.  Unassigned block-table tail entries
+        point at page 0 — the kernel still DMAs that tile but every
+        score in it is masked (slot >= n_valid), so the contents are
+        never attended."""
+        b = len(self.rows)
+        idx = np.asarray(self.lengths, np.int32)
+        bt = np.zeros((b, self.pages_per_slot), np.int32)
+        for i, owner in enumerate(self.rows):
+            pages = self.allocator.table(owner).pages
+            bt[i, :len(pages)] = pages
+
+        def stamp(node):
+            n_l = node.idx.shape[0]
+            return node._replace(
+                idx=jnp.asarray(np.broadcast_to(idx, (n_l, b)).copy()),
+                block_table=jnp.asarray(
+                    np.broadcast_to(bt, (n_l, b,
+                                         self.pages_per_slot)).copy()))
+
+        self.caches = {name: map_cache_nodes(seg, stamp)
+                       if seg is not None else None
+                       for name, seg in self.caches.items()}
+
+    def advance(self) -> None:
+        """Mirror one decode step: every resident row appended one
+        token.  Page backing was already ensured by
+        ``prepare_decode`` — only the host lengths move here."""
+        for i, owner in enumerate(self.rows):
+            assert owner is not None, "decode ran with a released row"
+            self.lengths[i] += 1

@@ -45,6 +45,12 @@ class Request:
     t_submit: float | None = None
     t_first: float | None = None
     t_last: float | None = None
+    # stamped at admission by the engine's prefix-cache plan
+    # (docs/paged-attention.md): physical pages mapped from prefix-
+    # hash hits, and prompt tokens whose prefill was skipped (served
+    # from the shared pages + decode-step replay instead)
+    prefix_pages: int = 0
+    prefill_skipped: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -132,4 +138,7 @@ class Scheduler:
             "tok_per_s": toks / span if span > 0 else float("nan"),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "mean_tpot_s": float(np.mean(tpots)) if tpots else float("nan"),
+            "prefix_hit_requests": sum(r.prefix_pages > 0 for r in done),
+            "prefill_tokens_skipped": sum(r.prefill_skipped
+                                          for r in done),
         }

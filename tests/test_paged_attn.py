@@ -1,0 +1,157 @@
+"""Floating-page decode-attention contract (docs/paged-attention.md):
+
+- paged-vs-contiguous bitwise parity: scattering a contiguous cache's
+  pages into arbitrary physical rows of a global pool and decoding
+  through the block table reproduces the contiguous decode EXACTLY
+  (fp8 AND bf16 cache, ref AND interpret backends);
+- slots may alias the SAME physical pages (the prefix-sharing read
+  path) without perturbing each other;
+- mixed per-slot depths through one paged launch match per-row calls;
+- the paged decode keeps the fused-kernel jaxpr contract: zero
+  pool-sized dequant upcasts / dots on the kernel path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.ref import decode_attn_ref, gather_pages
+
+B, KV, G, DH, T, NP = 3, 2, 4, 32, 16, 4
+C = NP * T
+POOL = 16          # > B*NP so the scatter can scramble freely
+
+
+def _quant(x):
+    from repro.core.formats import E4M3_MAX, TINY
+
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax, TINY) / E4M3_MAX
+    return (x.astype(jnp.float32) / s[..., None]).astype(
+        jnp.float8_e4m3fn), s
+
+
+def _contiguous(seed, kv_dtype):
+    """A contiguous (B, KV, C, Dh) cache + queries."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, KV, G, DH)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KV, C, DH)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, KV, C, DH)), jnp.bfloat16)
+    if kv_dtype == "fp8":
+        k, ks = _quant(k)
+        v, vs = _quant(v)
+        return q, k, v, ks, vs
+    return q, k, v, None, None
+
+
+def _scatter(k, v, ks, vs, seed=7):
+    """Scramble the contiguous cache's pages into a (P, KV, T, ·)
+    pool; rows not referenced by the block table hold garbage."""
+    rng = np.random.default_rng(seed)
+    bt = rng.permutation(POOL)[:B * NP].reshape(B, NP).astype(np.int32)
+
+    def pool_of(src, scale):
+        shape = ((POOL, KV, T) if scale else (POOL, KV, T, DH))
+        buf = jnp.asarray(rng.standard_normal(shape),
+                          jnp.float32).astype(src.dtype)
+        for b in range(B):
+            for j in range(NP):
+                buf = buf.at[bt[b, j]].set(src[b, :, j * T:(j + 1) * T])
+        return buf
+
+    pk, pv = pool_of(k, False), pool_of(v, False)
+    pks = pool_of(ks, True) if ks is not None else None
+    pvs = pool_of(vs, True) if vs is not None else None
+    return pk, pv, pks, pvs, jnp.asarray(bt)
+
+
+NV = jnp.asarray([5, 37, C], jnp.int32)     # mixed depths incl. full
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_paged_vs_contiguous_bitwise(kv_dtype, backend):
+    q, k, v, ks, vs = _contiguous(0, kv_dtype)
+    pk, pv, pks, pvs, bt = _scatter(k, v, ks, vs)
+    base = decode_attn_ref(q, k, v, ks, vs, NV, sm_scale=DH ** -0.5)
+    out = dispatch.decode_attention_paged(q, pk, pv, pks, pvs, NV, bt,
+                                          backend=backend)
+    assert jnp.array_equal(base, out), \
+        (kv_dtype, backend, float(jnp.abs(base - out).max()))
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+def test_ref_vs_interpret_bitwise(kv_dtype):
+    q, k, v, ks, vs = _contiguous(1, kv_dtype)
+    pk, pv, pks, pvs, bt = _scatter(k, v, ks, vs)
+    outs = {b: dispatch.decode_attention_paged(
+        q, pk, pv, pks, pvs, NV, bt, backend=b)
+        for b in ("ref", "interpret")}
+    assert jnp.array_equal(outs["ref"], outs["interpret"])
+
+
+def test_shared_pages_alias_without_perturbation():
+    """Two slots whose block tables point at the SAME physical pages
+    (prefix sharing) read identical bytes: slot outputs equal the
+    solo decode of the shared content, bitwise."""
+    q, k, v, ks, vs = _contiguous(2, "fp8")
+    pk, pv, pks, pvs, bt = _scatter(k, v, ks, vs)
+    # slot 1 aliases slot 0's first two pages, then diverges into its
+    # own pages — the CoW layout after a 2-page prefix hit
+    bt = bt.at[1, :2].set(bt[0, :2])
+    nv = jnp.asarray([2 * T, 2 * T, C], jnp.int32)
+    out = dispatch.decode_attention_paged(q, pk, pv, pks, pvs, nv, bt,
+                                          backend="interpret")
+    # slot 1 must see slot 0's K/V: rebuild its contiguous view from
+    # the aliased tables and compare against the oracle per slot
+    kg, vg = gather_pages(pk, bt), gather_pages(pv, bt)
+    ksg, vsg = gather_pages(pks, bt), gather_pages(pvs, bt)
+    base = decode_attn_ref(q, kg, vg, ksg, vsg, nv, sm_scale=DH ** -0.5)
+    assert jnp.array_equal(base, out)
+    assert jnp.array_equal(kg[0, :, :2 * T], kg[1, :, :2 * T])
+
+
+def test_mixed_depth_rows_match_per_row_calls():
+    """One paged launch over rows at different depths is bitwise a
+    stack of single-row launches (batch-composition independence)."""
+    q, k, v, ks, vs = _contiguous(3, "fp8")
+    pk, pv, pks, pvs, bt = _scatter(k, v, ks, vs)
+    batched = dispatch.decode_attention_paged(q, pk, pv, pks, pvs, NV,
+                                              bt, backend="interpret")
+    for b in range(B):
+        solo = dispatch.decode_attention_paged(
+            q[b:b + 1], pk, pv, pks, pvs, NV[b:b + 1], bt[b:b + 1],
+            backend="interpret")
+        assert jnp.array_equal(batched[b:b + 1], solo), b
+
+
+def test_paged_jaxpr_zero_pool_sized_upcasts_and_dots():
+    """The kernel path gathers pages inside the Pallas index maps:
+    the jaxpr outside the kernel launch holds ZERO pool-sized fp8
+    dequant upcasts and ZERO pool-sized dots (the ref path's gather +
+    einsum shows both — the counters see what the kernel removed)."""
+    from repro.core.introspect import (
+        count_dot_general_over,
+        count_fp8_dequant_upcasts,
+        count_primitive,
+    )
+
+    q, k, v, ks, vs = _contiguous(4, "fp8")
+    pk, pv, pks, pvs, bt = _scatter(k, v, ks, vs)
+    # cache-sized: the gathered per-slot view AND the pool itself
+    sizes = {B * KV * C * DH, POOL * KV * T * DH}
+
+    def run(backend):
+        return jax.make_jaxpr(
+            lambda *a: dispatch.decode_attention_paged(
+                *a, backend=backend))(q, pk, pv, pks, pvs, NV, bt)
+
+    jx_ref, jx_k = run("ref"), run("interpret")
+    assert count_fp8_dequant_upcasts(jx_ref, sizes) > 0
+    assert count_dot_general_over(jx_ref, sizes) > 0
+    assert count_fp8_dequant_upcasts(jx_k, sizes) == 0
+    assert count_dot_general_over(jx_k, sizes) == 0
+    assert count_primitive(jx_k, "pallas_call") == 1

@@ -1,0 +1,344 @@
+"""Copy-on-write prefix caching over the floating page pool
+(docs/paged-attention.md):
+
+- allocator units: refcount/free-list bookkeeping, double-free and
+  reservation-leak assertions, ensure_writable's fresh/ok/cow state
+  machine, LRU eviction of parked hashed pages and prefix revival;
+- ``page_keys`` chaining: a key identifies the whole prefix, not just
+  one page's tokens;
+- engine-level physical sharing: two requests with a page-aligned
+  common prefix genuinely share pages (asserted on allocator state),
+  the second SKIPS the shared prefill chunks, and a decode append
+  into a shared page copies-before-write;
+- the donor is bitwise unperturbed by sharing (vs solo serving), the
+  sharer's outputs are deterministic across fresh engines, and the
+  prefix map survives retirement (evictable pages revive on hit);
+- floating-vs-identity placement token parity, fp8 AND bf16 cache,
+  ref AND interpret backends (``REPRO_PAGED_PLACEMENT`` A/B).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.formats import BF16_CONFIG
+from repro.models.layers import init_tree
+from repro.models.transformer import model_defs
+from repro.serving import (
+    Engine,
+    PageAllocator,
+    Request,
+    page_keys,
+)
+
+T = 16                                  # serving PAGE_SIZE
+
+
+def _cfg(kv_dtype="bf16"):
+    return get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype=kv_dtype)
+
+
+def _params(cfg):
+    return init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 64, size=n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# page_keys: chained page-aligned prefix hashing
+# ---------------------------------------------------------------------------
+
+
+def test_page_keys_chain_over_the_whole_prefix():
+    toks = np.arange(40, dtype=np.int32)
+    keys = page_keys(toks, T)
+    assert len(keys) == 2               # only FULL pages get keys
+    # the frontier partial page never contributes
+    assert page_keys(np.concatenate([toks[:32], toks[:5]]), T) == keys
+    # a page-0 edit changes EVERY key (chained, not per-page)
+    t0 = toks.copy()
+    t0[3] += 1
+    k0 = page_keys(t0, T)
+    assert k0[0] != keys[0] and k0[1] != keys[1]
+    # a page-1 edit leaves key 0 alone
+    t1 = toks.copy()
+    t1[20] += 1
+    k1 = page_keys(t1, T)
+    assert k1[0] == keys[0] and k1[1] != keys[1]
+    assert page_keys(toks[:15], T) == []
+
+
+# ---------------------------------------------------------------------------
+# Allocator units: refcounts, guards, CoW state machine, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_refcounted_sharing_and_release():
+    al = PageAllocator(num_pages=8, page_size=4, slot_tokens=32)
+    donor = al.admit(owner=1, prompt_tokens=8, total_tokens=8)
+    for page, key in zip(donor.pages, ["a", "b"]):
+        assert al.register_hash(page, key)
+    assert al.lookup(["a", "b"]) == donor.pages
+    assert al.lookup(["a", "zzz"]) == donor.pages[:1]   # longest run
+    # a second owner maps the shared pages: refcount 2, no new alloc
+    bt = al.admit(owner=2, prompt_tokens=0, total_tokens=12,
+                  shared=donor.pages)
+    assert bt.pages == donor.pages and bt.shared0 == 2
+    assert all(al.refcount(p) == 2 for p in donor.pages)
+    assert al.free_pages == 6           # nothing allocated for owner 2
+    al.release(1)                       # donor retires first
+    assert all(al.refcount(p) == 1 for p in donor.pages)
+    al.release(2)                       # hashed pages park, not free
+    assert al.cached_pages == 2 and al.free_pages == 8
+    assert al.lookup(["a", "b"]) == donor.pages   # still hittable
+
+
+def test_allocator_double_free_and_reservation_leak_guards():
+    al = PageAllocator(num_pages=4, page_size=4)
+    bt = al.admit(owner=1, prompt_tokens=4, total_tokens=4)
+    with pytest.raises(AssertionError, match="overrun"):
+        al._alloc_private(bt)           # reserved 1, private already 1
+    al2 = PageAllocator(num_pages=4, page_size=4)
+    page = al2.admit(owner=1, prompt_tokens=4, total_tokens=4).pages[0]
+    al2._unref(page)
+    with pytest.raises(AssertionError, match="double-free"):
+        al2._unref(page)
+
+
+def test_allocator_ensure_writable_state_machine():
+    al = PageAllocator(num_pages=8, page_size=4, slot_tokens=32)
+    bt = al.admit(owner=1, prompt_tokens=4, total_tokens=16)
+    assert al.ensure_writable(1, 0)[0] == "ok"     # private, unhashed
+    al.register_hash(bt.pages[0], "x")
+    kind, old, new = al.ensure_writable(1, 0)      # hashed even at rc1
+    assert kind == "cow" and old != new and bt.pages[0] == new
+    assert al.cached_pages == 1         # the pristine page parked
+    kind, page, _ = al.ensure_writable(1, 1)       # one past frontier
+    assert kind == "fresh" and bt.pages[1] == page
+    # rc>1 CoW: a sharer writing into a still-referenced page
+    shared = al.lookup(["x"])
+    bt2 = al.admit(owner=2, prompt_tokens=0, total_tokens=8,
+                   shared=shared)
+    al.admit(owner=3, prompt_tokens=0, total_tokens=8, shared=shared)
+    kind, old, new = al.ensure_writable(2, 0)
+    assert kind == "cow" and bt2.pages[0] == new
+    assert al.refcount(old) == 1        # owner 3 still holds it
+
+
+def test_allocator_lru_eviction_drops_the_prefix():
+    al = PageAllocator(num_pages=4, page_size=4)
+    bt = al.admit(owner=1, prompt_tokens=16, total_tokens=16)
+    keys = ["k0", "k1", "k2", "k3"]
+    for page, key in zip(bt.pages, keys):
+        al.register_hash(page, key)
+    al.release(1)
+    assert al.cached_pages == 4 and al.free_pages == 4
+    # a fresh admission must reclaim parked pages, oldest first; the
+    # evicted page's hash dies with it, and because keys are CHAINED
+    # the whole prefix becomes unhittable (honest, not corrupt)
+    al.admit(owner=2, prompt_tokens=8, total_tokens=8)
+    assert al.cached_pages == 2
+    assert al.lookup(keys) == []
+
+
+def test_allocator_evictable_pages_revive_on_hit():
+    al = PageAllocator(num_pages=4, page_size=4)
+    donor = al.admit(owner=1, prompt_tokens=8, total_tokens=8)
+    for page, key in zip(donor.pages, ["a", "b"]):
+        al.register_hash(page, key)
+    al.release(1)
+    hit = al.lookup(["a", "b"])
+    assert hit == donor.pages
+    # reviving the parked pages consumes free-pool headroom: a request
+    # needing them PLUS more than the remainder must not admit
+    assert al.can_admit(8, shared=hit)
+    assert not al.can_admit(16, shared=hit, cow_slack=1)
+    bt = al.admit(owner=2, prompt_tokens=0, total_tokens=12, shared=hit)
+    assert al.cached_pages == 0 and bt.shared0 == 2
+    assert all(al.refcount(p) == 1 for p in hit)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level sharing: the acceptance contract
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_hit_shares_pages_and_skips_prefill():
+    """Two requests with a 2-page common prefix: the second maps the
+    donor's PHYSICAL pages (same ids, refcount 2 — asserted on
+    allocator state), skips their prefill chunks, and both complete."""
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    prefix = _prompt(rng, 2 * T)
+    donor = Request(rid=0, prompt=prefix, max_new=4)
+    sharer = Request(rid=1, prompt=np.concatenate(
+        [prefix, _prompt(rng, 5)]), max_new=4)
+    eng = Engine(cfg, params, num_slots=2, max_len=48)
+    assert eng.float_pages and eng.prefix_cache
+    eng.submit([donor, sharer])
+    eng.step()                          # both admitted in one step
+    al = eng.kv.allocator
+    bt0, bt1 = al.table(0), al.table(1)
+    assert bt1.pages[:2] == bt0.pages[:2] and bt1.shared0 == 2
+    assert all(al.refcount(p) == 2 for p in bt0.pages[:2])
+    assert eng.prefill_calls == 1       # the sharer NEVER prefilled
+    assert eng.prefix_hits == 1 and eng.pages_shared == 2
+    assert sharer.prefix_pages == 2
+    assert sharer.prefill_skipped == 2 * T
+    eng.run(log=None)                   # drain
+    assert donor.done and sharer.done
+    assert len(donor.out) == 4 and len(sharer.out) == 4
+    # partial hit: the sharer's first write lands in its own fresh
+    # page past the shared prefix — no copy-on-write needed
+    assert eng.kv.cow_copies == 0
+    assert al.free_pages == al.num_pages and al.cached_pages >= 2
+
+
+def test_engine_full_hit_triggers_exactly_one_cow():
+    """An IDENTICAL prompt is a full page-aligned hit: the replayed
+    last prompt token writes into the shared frontier page, which must
+    copy-before-write (the donor's registered page stays pristine)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = _prompt(np.random.default_rng(1), 2 * T)
+    donor = Request(rid=0, prompt=prompt, max_new=4)
+    sharer = Request(rid=1, prompt=prompt.copy(), max_new=4)
+    eng = Engine(cfg, params, num_slots=2, max_len=48)
+    eng.submit([donor, sharer])
+    # admit WITHOUT decoding: the first decode step copies-on-write,
+    # so physical aliasing is only observable between the two
+    eng._retire_and_refill()
+    eng._admit_new_rows()
+    al = eng.kv.allocator
+    shared = al.table(0).pages[:2]
+    assert al.table(1).pages[:2] == shared
+    assert all(al.refcount(p) == 2 for p in shared)
+    eng.run(log=None)
+    assert eng.kv.cow_copies == 1
+    assert eng.prefill_calls == 1
+    assert sharer.prefill_skipped == 2 * T - 1   # last token replayed
+    assert donor.done and sharer.done and len(sharer.out) == 4
+
+
+def test_donor_is_unperturbed_by_sharing():
+    """Copy-on-write correctness, observed end to end: the donor's
+    greedy continuation is token-for-token identical whether or not a
+    sharer mapped (and then diverged from) its prefix pages."""
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(2)
+    prefix = _prompt(rng, 2 * T)
+    suffix = _prompt(rng, 5)
+    solo = Request(rid=0, prompt=prefix, max_new=6)
+    Engine(cfg, params, num_slots=1, max_len=48).run([solo], log=None)
+    donor = Request(rid=0, prompt=prefix, max_new=6)
+    sharer = Request(rid=1, prompt=np.concatenate([prefix, suffix]),
+                     max_new=6)
+    eng = Engine(cfg, params, num_slots=2, max_len=48)
+    eng.run([donor, sharer], log=None)
+    assert eng.prefix_hits == 1
+    assert donor.out == solo.out, (donor.out, solo.out)
+
+
+def test_sharer_outputs_deterministic_across_engines():
+    """The replay-through-decode path is deterministic: a fresh engine
+    serving the same shared-prefix trace reproduces every output."""
+    cfg = _cfg()
+    params = _params(cfg)
+
+    def serve():
+        rng = np.random.default_rng(3)
+        prefix = _prompt(rng, 2 * T)
+        reqs = [Request(rid=0, prompt=prefix, max_new=4),
+                Request(rid=1,
+                        prompt=np.concatenate([prefix, _prompt(rng, 3)]),
+                        max_new=4)]
+        eng = Engine(cfg, params, num_slots=2, max_len=48)
+        eng.run(reqs, log=None)
+        assert eng.prefix_hits == 1
+        return [r.out for r in reqs]
+
+    assert serve() == serve()
+
+
+def test_prefix_map_survives_retirement():
+    """A retired donor's hashed pages park evictable and revive on the
+    next hit: the second serve of the same prompt runs ZERO prefill."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = _prompt(np.random.default_rng(4), 2 * T)
+    eng = Engine(cfg, params, num_slots=1, max_len=48, num_pages=6)
+    first = Request(rid=0, prompt=prompt, max_new=3)
+    eng.run([first], log=None)
+    al = eng.kv.allocator
+    assert al.free_pages == al.num_pages and al.cached_pages == 2
+    second = Request(rid=1, prompt=prompt.copy(), max_new=3)
+    eng.run([second], log=None)
+    assert eng.prefill_calls == 1       # revival, not re-prefill
+    assert eng.prefix_hits == 1 and second.prefix_pages == 2
+    assert second.done and len(second.out) == 3
+
+
+def test_full_hit_on_minimal_pool_falls_back_to_cold():
+    """On a pool exactly the size of one slot, a full-hit admission
+    (page revival + CoW slack) needs more headroom than a cold one:
+    the engine must serve the request cold, not livelock the FIFO."""
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = _prompt(np.random.default_rng(7), 2 * T)
+    eng = Engine(cfg, params, num_slots=1, max_len=48)   # 3-page pool
+    first = Request(rid=0, prompt=prompt, max_new=3)
+    eng.run([first], log=None)
+    second = Request(rid=1, prompt=prompt.copy(), max_new=3)
+    eng.run([second], log=None)
+    assert eng.prefill_calls == 2 and eng.prefix_hits == 0
+    assert second.done and second.out == first.out
+
+
+def test_prefix_cache_off_never_shares():
+    cfg = _cfg()
+    params = _params(cfg)
+    prompt = _prompt(np.random.default_rng(5), 2 * T)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new=3)
+            for i in range(2)]
+    eng = Engine(cfg, params, num_slots=2, max_len=48,
+                 prefix_cache=False)
+    eng.run(reqs, log=None)
+    assert eng.prefill_calls == 2 and eng.prefix_hits == 0
+    assert reqs[0].out == reqs[1].out   # identical prompts, greedy
+
+
+# ---------------------------------------------------------------------------
+# Floating vs identity placement: token parity A/B
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp8", "bf16"])
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_float_vs_identity_placement_parity(monkeypatch, kv_dtype,
+                                            backend):
+    """The floating pool is a pure PLACEMENT change: serving the same
+    mixed-length trace under ``REPRO_PAGED_PLACEMENT=identity`` (the
+    PR5 contiguous rows) and ``float`` (gathered pages) produces the
+    same tokens, fp8 and bf16 cache, ref and kernel backends."""
+    monkeypatch.setenv("REPRO_KERNELS", backend)
+    cfg = _cfg(kv_dtype)
+    params = _params(cfg)
+    lens = [6, 17, 11]
+
+    def serve(placement):
+        monkeypatch.setenv("REPRO_PAGED_PLACEMENT", placement)
+        rng = np.random.default_rng(6)
+        reqs = [Request(rid=i, prompt=_prompt(rng, n), max_new=4)
+                for i, n in enumerate(lens)]
+        eng = Engine(cfg, params, num_slots=2, max_len=32)
+        assert eng.float_pages == (placement == "float")
+        eng.run(reqs, log=None)
+        return [r.out for r in reqs]
+
+    assert serve("float") == serve("identity")
