@@ -2,10 +2,12 @@
 a request queue with mixed prompt lengths — the fp8-at-rest serving
 defaults: build-time pre-quantized weights (PrequantParams), the fp8
 KV cache, the fused decode-attention kernel, and per-slot depths with
-floating-page block tables (docs/continuous-batching.md).  A second
+floating-page block tables (docs/continuous-batching.md).  Prompts
+are chunk-prefilled through the mixed decode-mode step (Scheduler
+v2), interleaved with the resident rows' decode steps.  A second
 wave shares a system prompt: its page-aligned prefix is stored once
-and served copy-on-write, skipping the repeat prefills
-(docs/paged-attention.md).
+and served copy-on-write, and only each request's unshared suffix
+chunk-prefills (docs/paged-attention.md).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -75,16 +77,18 @@ def main():
     ]
     print(f"\nshared-prefix wave: {len(wave)} requests repeating a "
           f"{len(system_prompt)}-token system prompt")
-    before = engine.prefill_calls
+    skipped_before = s["prefill_tokens_skipped"]
     done = engine.run(wave)
     assert all(r.done for r in done) and len(done) == len(wave)
     s = engine.stats()
     hits = [r for r in wave if r.prefix_pages > 0]
-    # the first wave request prefills the system prompt; every later
-    # one maps its pages copy-on-write and skips that prefill
+    # the first wave request chunk-prefills the system prompt; every
+    # later one maps its pages copy-on-write and chunks only its own
+    # few-token suffix
     assert len(hits) == len(wave) - 1, \
         [(r.rid, r.prefix_pages) for r in wave]
-    assert engine.prefill_calls - before == 1
+    assert (s["prefill_tokens_skipped"] - skipped_before
+            == (len(wave) - 1) * len(system_prompt))
     print(f"prefix hits {len(hits)}/{len(wave)} | prefill tokens "
           f"skipped {s['prefill_tokens_skipped']} | pages shared "
           f"{s['pages_shared']} | CoW copies {s['cow_copies']} | "

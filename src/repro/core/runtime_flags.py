@@ -116,6 +116,30 @@ def paged_placement() -> str:
     return "float"
 
 
+# Scheduler v2 (see repro.serving.engine and
+# docs/continuous-batching.md): chunked prefill interleaves fixed-size
+# prompt chunks with decode steps through ONE compiled mixed-step
+# shape (no per-bucket prefill compiles, no B=1 prefill stall, and
+# prefix-hit suffixes prefill at an offset instead of replaying
+# token-by-token).  REPRO_CHUNKED_PREFILL=0 falls back to the v1
+# whole-prompt B=1 prefill (prefix hits are then served cold).
+def chunked_prefill() -> bool:
+    """Whether the paged engine prefills prompts in fixed-size chunks
+    interleaved with decode steps (Scheduler v2)."""
+    return os.environ.get("REPRO_CHUNKED_PREFILL", "1").strip() != "0"
+
+
+# Preemption + usage-based admission (float placement only): victims'
+# pages are copied to a host-side store and freed, so `PageAllocator`
+# admission runs on actual usage plus a small headroom instead of
+# worst-case prompt+max_new reservations.  REPRO_PREEMPTION=0 keeps
+# the v1 reservation-based admission (nothing is ever swapped out).
+def serve_preemption() -> bool:
+    """Whether the paged engine may preempt running requests to host
+    and admit against actual page usage (Scheduler v2)."""
+    return os.environ.get("REPRO_PREEMPTION", "1").strip() != "0"
+
+
 def serve_prefix_cache() -> bool:
     """Whether the floating-page engine hashes page-aligned prompt
     prefixes and maps hits copy-on-write onto the shared physical

@@ -22,8 +22,9 @@ from repro.core.linear import dense_general
 from repro.core.runtime_flags import decode_attn_path
 from repro.distributed.sharding import shard
 from repro.kernels import dispatch
+from repro.core.runtime_flags import einsum as rf_einsum
 from .layers import PDef, apply_rope
-from ._attn_core import chunked_attention, _window
+from ._attn_core import NEG_INF, chunked_attention, _window
 
 
 class KVCache(NamedTuple):
@@ -238,6 +239,68 @@ def _decode_attention(cfg, q, cache: KVCache, n_valid):
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
+def _chunk_attention(cfg, q, k_new, v_new, cache: KVCache, pos0):
+    """Chunked-prefill attention: S new prompt tokens at each slot's
+    depth against the already-resident history plus an in-chunk causal
+    mask (docs/continuous-batching.md).
+
+    q: (B,S,H,Dh); k_new/v_new: the chunk's pre-quantization bf16
+    K/V in projection layout (B,S,KV,Dh) — the values ``_cache_write``
+    just appended.  ``pos0`` is the PRE-write depth: history positions
+    ``< pos0[b]`` are read back from the (post-write) cache — paged
+    caches gather each slot's pages through the block table — so fresh
+    and garbage-padded positions (all ≥ pos0) are masked regardless of
+    content, while the chunk's diagonal block attends its exact bf16
+    values, matching whole-prompt prefill's treatment.  One combined
+    f32 softmax over history + chunk.  fp8 caches read history back
+    dequantized (the accepted chunked-vs-whole difference; bf16 caches
+    read back the exact original bytes).  Non-windowed families only
+    (``transformer.chunk_prefill_supported``) — history positions are
+    absolute, never ring-wrapped."""
+    b, s, h, dh = q.shape
+    kvh = k_new.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    fp8 = cache.k_scale is not None
+    pos0 = jnp.broadcast_to(jnp.atleast_1d(pos0), (b,))
+
+    if cache.block_table is not None:
+        def gather(pool):                     # (P,KV,T,...) -> (B,KV,C,...)
+            x = pool[cache.block_table]       # (B,NP,KV,T,...)
+            x = jnp.moveaxis(x, 2, 1)         # (B,KV,NP,T,...)
+            return x.reshape(b, kvh, -1, *x.shape[4:])
+
+        kh, vh = gather(cache.k), gather(cache.v)
+        ksh = gather(cache.k_scale) if fp8 else None
+        vsh = gather(cache.v_scale) if fp8 else None
+    else:
+        kh, vh = cache.k, cache.v
+        ksh, vsh = cache.k_scale, cache.v_scale
+    if fp8:
+        kh = _dequant_kv(kh, ksh)
+        vh = _dequant_kv(vh, vsh)
+    c = kh.shape[2]
+
+    qg = q.reshape(b, s, kvh, g, dh).transpose(0, 2, 3, 1, 4)
+    kf = k_new.transpose(0, 2, 1, 3)          # (B,KV,S,Dh)
+    vf = v_new.transpose(0, 2, 1, 3)
+
+    s_hist = rf_einsum("bkgsd,bkcd->bkgsc", qg, kh) * scale
+    s_self = rf_einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    hist_ok = jnp.arange(c, dtype=jnp.int32)[None, :] < pos0[:, None]
+    s_hist = jnp.where(hist_ok[:, None, None, None, :], s_hist, NEG_INF)
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    s_self = jnp.where(causal[None, None, None], s_self, NEG_INF)
+    scores = jnp.concatenate([s_hist, s_self], axis=-1)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = (rf_einsum("bkgsc,bkcd->bkgsd", p[..., :c], vh)
+           + rf_einsum("bkgst,bktd->bkgsd", p[..., c:], vf))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
 def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
     """Append S_new positions (prefill: many; decode: 1) with ring
     semantics for window attention; fp8 caches quantize on write.
@@ -256,29 +319,82 @@ def _cache_write(cfg, cache: KVCache, k_new, v_new) -> KVCache:
     s_new = k_new.shape[2]
 
     if cache.block_table is not None:
-        # floating-page pool: one decode token lands in physical page
-        # block_table[b, idx[b] // T] at in-page offset idx[b] % T.
-        # The engine guarantees the target page is writable (refcount
-        # 1) via copy-on-write BEFORE the step, so a scatter here never
+        # floating-page pool: position p lands in physical page
+        # block_table[b, p // T] at in-page offset p % T.  The engine
+        # guarantees every target page is writable (refcount 1) via
+        # copy-on-write BEFORE the step, so a scatter here never
         # aliases a shared page.  Advanced indices (page, off) with the
-        # interior ':' put the batch dim first → (B, KV[, Dh]) updates.
-        assert cache.idx.ndim == 1 and s_new == 1, \
-            "paged cache appends decode one token per slot"
+        # interior ':' put the batch dim first → (B[, S], KV, ...)
+        # updates.
+        assert cache.idx.ndim == 1, "paged cache uses per-slot depths"
         t = cache.k.shape[2]
-        pos = cache.idx
-        page = jnp.take_along_axis(
-            cache.block_table, (pos // t)[:, None], axis=1)[:, 0]
+        if s_new == 1:
+            pos = cache.idx
+            page = jnp.take_along_axis(
+                cache.block_table, (pos // t)[:, None], axis=1)[:, 0]
+            off = pos % t
+
+            def put(pool, upd):
+                return pool.at[page, :, off].set(upd.astype(pool.dtype))
+
+            return cache._replace(
+                k=put(cache.k, k_new[:, :, 0]),
+                v=put(cache.v, v_new[:, :, 0]),
+                k_scale=put(cache.k_scale, ks_new[:, :, 0]) if fp8
+                else None,
+                v_scale=put(cache.v_scale, vs_new[:, :, 0]) if fp8
+                else None,
+                idx=cache.idx + 1)
+
+        # chunked prefill: S positions from each slot's depth into its
+        # own pages.  Padded tail positions past the block-table width
+        # are redirected to the pool's TRASH row (the one extra
+        # physical page init_paged_pools allocates; explicit where —
+        # a clipped gather would hit the request's own LAST real
+        # page); in-table entries that aren't assigned yet already
+        # hold the trash row id (the engine restamps them).  Trash
+        # bytes are never read: history masking is `< pos0` and
+        # n_valid never covers them.
+        n_pages = cache.block_table.shape[1]
+        trash = cache.k.shape[0] - 1
+        pos = cache.idx[:, None] + jnp.arange(s_new, dtype=jnp.int32)
+        lp = pos // t
+        page = jnp.where(
+            lp < n_pages,
+            jnp.take_along_axis(cache.block_table,
+                                jnp.clip(lp, 0, n_pages - 1), axis=1),
+            trash)
         off = pos % t
 
-        def put(pool, upd):
-            return pool.at[page, :, off].set(upd.astype(pool.dtype))
+        def put_s(pool, upd):                 # upd (B,KV,S,...)
+            u = jnp.moveaxis(upd, 2, 1).astype(pool.dtype)
+            return pool.at[page, :, off].set(u)
 
         return cache._replace(
-            k=put(cache.k, k_new[:, :, 0]),
-            v=put(cache.v, v_new[:, :, 0]),
-            k_scale=put(cache.k_scale, ks_new[:, :, 0]) if fp8 else None,
-            v_scale=put(cache.v_scale, vs_new[:, :, 0]) if fp8 else None,
-            idx=cache.idx + 1)
+            k=put_s(cache.k, k_new), v=put_s(cache.v, v_new),
+            k_scale=put_s(cache.k_scale, ks_new) if fp8 else None,
+            v_scale=put_s(cache.v_scale, vs_new) if fp8 else None,
+            idx=cache.idx + s_new)
+
+    if cache.idx.ndim == 1 and s_new > 1:
+        # per-slot chunked-prefill append (identity placement): each
+        # row writes S positions at its own depth.  Advanced-index
+        # scatter with mode="drop" so a chunk's padded tail positions
+        # (≥ C) vanish instead of clamping onto live slots
+        # (dynamic_update_slice CLAMPS start indices).  No ring
+        # semantics: the engine gates chunked prefill to non-windowed
+        # families (C == max_len).
+        pos = cache.idx[:, None] + jnp.arange(s_new, dtype=jnp.int32)
+        b_idx = jnp.arange(cache.k.shape[0])[:, None]
+
+        def put_p(buf, upd):                  # upd (B,KV,S,...)
+            u = jnp.moveaxis(upd, 2, 1).astype(buf.dtype)
+            return buf.at[b_idx, :, pos].set(u, mode="drop")
+
+        return KVCache(put_p(cache.k, k_new), put_p(cache.v, v_new),
+                       put_p(cache.k_scale, ks_new) if fp8 else None,
+                       put_p(cache.v_scale, vs_new) if fp8 else None,
+                       cache.idx + s_new)
 
     if s_new >= c:
         # keep the last C positions (prefill of a window cache);
@@ -340,13 +456,22 @@ def attention(cfg, p, x, positions, qcfg: QuantConfig,
     """Returns (out, new_cache).  Modes:
       train   — chunked causal attention, no cache
       prefill — chunked causal attention + cache fill
-      decode  — single new token against the cache
+      decode  — S == 1: single new token against the cache (the fused
+                kernel); S > 1: a chunked-prefill step — S prompt
+                tokens appended at the slot's depth, attending history
+                + an in-chunk causal mask (non-windowed families only;
+                the engine gates this)
     """
     if mode == "decode":
         q, k_new, v_new = _project_qkv(cfg, p, x, positions, qcfg)
-        new_cache = _cache_write(cfg, cache, k_new, v_new)
-        n_valid = new_cache.idx
-        out = _decode_attention(cfg, q, new_cache, n_valid)
+        if x.shape[1] == 1:
+            new_cache = _cache_write(cfg, cache, k_new, v_new)
+            n_valid = new_cache.idx
+            out = _decode_attention(cfg, q, new_cache, n_valid)
+        else:
+            pos0 = cache.idx
+            new_cache = _cache_write(cfg, cache, k_new, v_new)
+            out = _chunk_attention(cfg, q, k_new, v_new, new_cache, pos0)
     else:
         q, k, v = _project_qkv(cfg, p, x, positions, qcfg)
         out = chunked_attention(cfg, q, k, v)

@@ -317,6 +317,16 @@ def paged_decode_supported(cfg, max_len: int, page_size: int) -> bool:
     return c == max_len and c % page_size == 0
 
 
+def chunk_prefill_supported(cfg, max_len: int) -> bool:
+    """True iff chunked prefill can write prompt chunks at an offset
+    into this family's cache (docs/continuous-batching.md): per-head
+    KVCache families only, and no window/ring semantics — chunk
+    positions map to absolute cache slots, never wrap."""
+    if cfg.family not in ("dense", "audio", "vlm", "moe"):
+        return False
+    return attn_mod.cache_len(cfg, max_len) == max_len
+
+
 def init_paged_pools(cfg, max_len: int, num_pages: int,
                      page_size: int) -> dict:
     """Stacked floating-page pool caches for every segment — the
@@ -324,12 +334,18 @@ def init_paged_pools(cfg, max_len: int, num_pages: int,
     Each array leaf gains the leading layers axis exactly like
     ``init_caches``; per-slot ``idx`` / ``block_table`` leaves start
     at batch 0 (the engine restamps them from host state every step).
-    Requires ``paged_decode_supported``."""
+    The pool carries ``num_pages + 1`` physical rows: the extra last
+    row is the TRASH page — chunked-prefill padding positions and
+    unassigned block-table entries point at it, so garbage scatters
+    never land in another request's page (its bytes are never read;
+    docs/continuous-batching.md).  Requires
+    ``paged_decode_supported``."""
     assert paged_decode_supported(cfg, max_len, page_size)
     pps = attn_mod.cache_len(cfg, max_len) // page_size
     caches = {}
     for seg in build_segments(cfg):
-        one = attn_mod.init_page_pool(cfg, num_pages, pps, 0, page_size)
+        one = attn_mod.init_page_pool(cfg, num_pages + 1, pps, 0,
+                                      page_size)
         caches[seg.name] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (seg.n, *x.shape)).copy()
             if hasattr(x, "shape") else x, one)

@@ -6,9 +6,12 @@
   global page pool (``FloatingPageCache``) and the identity-placement
   per-slot rows (``PagedKVCache``);
 - ``scheduler`` — FIFO admission, EOS/max_new retirement, TTFT/TPOT
-  metrics (``Scheduler``, ``Request``);
-- ``engine`` — prefill-into-slot (or prefix-hit replay) + batched
-  decode over the per-slot length vector (``Engine``).
+  metrics and the SLO policies built on them (``Scheduler``,
+  ``Request``, ``SLOTargets``);
+- ``engine`` — chunked prefill interleaved with batched decode over
+  the per-slot length vector, preemption with page swap-to-host
+  (``Engine``; ``REPRO_CHUNKED_PREFILL=0`` keeps the v1 whole-prompt
+  prefill path as the A/B baseline).
 
 ``launch/serve.py`` is the CLI over this package; the legacy
 contiguous-ring ``Server`` there is the ``REPRO_SERVE_PAGED=0``
@@ -27,7 +30,7 @@ from .paged_cache import (
     SlotCapacityExceeded,
     page_keys,
 )
-from .scheduler import Request, RequestState, Scheduler
+from .scheduler import Request, RequestState, Scheduler, SLOTargets
 
 __all__ = [
     "Engine",
@@ -46,4 +49,5 @@ __all__ = [
     "Request",
     "RequestState",
     "Scheduler",
+    "SLOTargets",
 ]

@@ -1,56 +1,54 @@
 """Continuous-batching serving engine over the paged KV cache — the
-layer between the model's prefill/decode step functions and the
-``launch/serve.py`` CLI (docs/continuous-batching.md).
+layer between the model's step functions and the ``launch/serve.py``
+CLI (docs/continuous-batching.md).
 
-One engine ``step()``:
+Scheduler v2 (the default, ``REPRO_CHUNKED_PREFILL``): one engine
+``step()`` is
 
-  1. retire finished requests: unreference their pages, then either
-     refill the row in place from the queue (steady state) or
-     swap-shrink it out of the decode batch (tail drain — finished
-     slots never feed another decode step);
-  2. admit queued requests while slots and pages allow — admission is
-     ACTUAL free-pool accounting (outstanding private reservations vs
-     allocatable pages, ``PageAllocator.can_admit``), not a
-     worst-case contiguous-row count; page exhaustion = backpressure,
-     the request stays queued;
-  3. one batched decode over the resident rows — every row active,
-     each at its own depth via the per-slot length vector that flows
-     ``KVCache.idx (B,)`` -> per-slot RoPE positions -> per-slot
-     writes -> the decode-attention kernel's ``n_valid`` scalar-
-     prefetch vector.
+  1. retire finished requests (release pages, shrink them out of the
+     decode batch);
+  2. swap preempted requests back in when their pages fit again
+     (FIFO over the preempted deque — they hold finished work);
+  3. up to ``Scheduler.chunk_budget()`` CHUNKED-PREFILL steps: the
+     staging request's next ``chunk_tokens`` prompt tokens run as one
+     (1, chunk) decode-mode step writing at the request's own depth
+     into its own pages (block-table scatter; padded tail garbage
+     lands in the trash page), attending over its already-resident
+     history.  The final chunk's last real logit is the request's
+     first output token (stamps TTFT) and the request joins the
+     decode batch at its true prompt length;
+  4. one batched (B, 1) decode over the resident rows, every row at
+     its own depth.
 
-Page placement (``REPRO_PAGED_PLACEMENT``, docs/paged-attention.md):
-where the family supports it (per-head KV cache, no window, C a
-whole number of pages) the cache is a ``FloatingPageCache`` — one
-global page pool, per-slot block tables threaded into the decode
-kernel as a scalar-prefetch operand.  Other families (MLA latent,
-recurrent state, windowed rings) and the ``identity`` override keep
-the PR5 per-slot contiguous rows.
+One compiled mixed-step graph serves both shapes (3) and (4) — there
+is no per-prompt-bucket prefill compile and no B=1 whole-prompt
+stall; a long prompt's chunks interleave with other requests' decode
+steps.  A prefix-cache hit (float placement, ``REPRO_PREFIX_CACHE``)
+maps its page-aligned shared prefix copy-on-write and chunk-prefills
+only the UNSHARED SUFFIX at an offset — the replay-through-decode
+path this replaces is gone.
 
-Prefix caching (float placement only, ``REPRO_PREFIX_CACHE``): at
-admission the head request's page-aligned prompt prefix is hashed
-(``page_keys`` — chained, so key j covers tokens [0, (j+1)*T)) and
-looked up; on a hit the request maps the shared physical pages
-copy-on-write, SKIPS the prefill of those chunks entirely, and the
-engine replays only the remaining prompt tokens through ordinary
-batched decode steps (samples discarded until the last prompt token
-is fed — its sample is the request's first output token and stamps
-TTFT).  A cold request's full prompt pages are registered after its
-prefill insert; a prefix-hit request's additional full pages register
-when its replay completes.  Shared pages are never written in place:
-``FloatingPageCache.prepare_decode`` copies-before-write
-(refcount > 1 or hash-registered), bounded at ONE CoW per request
-(only a fully-page-aligned full hit ever writes into a shared page).
+Admission is usage-based when preemption is on
+(``REPRO_PREEMPTION``): a request reserves its prompt plus one page
+of headroom instead of the worst case, and outgrowing the
+reservation extends it page by page.  When an extension finds the
+pool dry, the engine PREEMPTS: ``Scheduler.pick_victim`` chooses the
+resident request with the most TPOT headroom, its pages are copied
+to host (payloads and scales, bitwise) and freed, and the victim
+parks in a deque until retirement frees enough pages to swap back in
+and resume at its recorded depth.  A request whose worst case
+exceeds the whole pool is still rejected at submit — so a lone
+resident request always fits and the preempt-retry loop terminates.
 
-Prefill runs one request at a time (B=1) into a fresh cache and the
-result row is merged into the batch (identity) or scattered into
-pool pages (float) — so a request's tokens are bitwise independent
-of whichever other requests happen to be resident (the mixed-depth
-parity contract, asserted in tests/test_paged_serving.py).  Prompts
-are right-padded to a compile bucket (``prompt_bucket``) so prefill
-compiles once per bucket, not once per prompt length; the true
-length is what gets stamped into the merged row's ``idx``, so padded
-garbage positions are never attended.
+``Request.arrival_time`` turns ``run()`` into an open-loop driver:
+requests are submitted (and their TTFT clocks started) at their
+trace offsets instead of all at once.
+
+The v1 path (whole-prompt bucketed B=1 prefill, reservation-based
+admission, no preemption) is kept verbatim behind
+``REPRO_CHUNKED_PREFILL=0`` as the A/B baseline, and is the
+automatic fallback for families the mixed step cannot serve
+(recurrent states, MLA latent caches, windowed rings).
 
 Weights are pre-quantized at build exactly like the legacy Server
 (``PrequantParams``; ``REPRO_SERVE_PREQUANT=0`` falls back to cached
@@ -68,11 +66,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime_flags import (
+    chunked_prefill,
     paged_placement,
+    serve_preemption,
     serve_prefix_cache,
     serve_prequant,
 )
-from repro.models.transformer import paged_decode_supported
+from repro.models.transformer import (
+    chunk_prefill_supported,
+    init_caches,
+    map_cache_nodes,
+    paged_decode_supported,
+)
 from repro.train.steps import (
     make_decode_step,
     make_prefill_step,
@@ -88,9 +93,10 @@ from .paged_cache import (
     SlotCapacityExceeded,
     page_keys,
 )
-from .scheduler import Request, Scheduler
+from .scheduler import Request, RequestState, Scheduler, SLOTargets
 
 PROMPT_BUCKET = 16
+CHUNK_TOKENS = 32
 
 
 def prepare_weights(cfg, params):
@@ -117,17 +123,28 @@ class PrefixPlan:
     ``keys``        chained page hashes of every FULL prompt page
     ``pages``       physical pages hit (longest registered prefix run,
                     clamped to the prompt's full pages) — empty = cold
-    ``replay_from`` first prompt position fed through decode instead
-                    of prefill: ``min(n_shared*T, prompt_len - 1)``
-                    (a FULL hit still replays the last prompt token,
+    ``suffix_from`` first prompt position that chunk-prefills:
+                    ``min(n_shared*T, prompt_len - 1)`` (a FULL hit
+                    still runs the last prompt token through a chunk,
                     whose sample is the first output)
-    ``cow_slack``   1 when the replay write lands inside a shared page
-                    (full page-aligned hit), else 0 — reserved so the
-                    copy-on-write can always allocate"""
+    ``cow_slack``   1 when the suffix's first write lands inside a
+                    shared page (full page-aligned hit), else 0 —
+                    reserved so the copy-on-write can always
+                    allocate"""
     keys: list
     pages: list
-    replay_from: int
+    suffix_from: int
     cow_slack: int
+
+
+@dataclasses.dataclass
+class _Staging:
+    """The one request currently chunk-prefilling: its pages are
+    admitted but it has no decode-batch row until the last chunk."""
+    req: Request
+    pos: int                  # next prompt position to chunk-prefill
+    keys: list | None         # page hashes to publish at attach (float)
+    row_cache: dict | None    # detached one-row caches (identity only)
 
 
 class Engine:
@@ -137,8 +154,10 @@ class Engine:
                  page_size: int = PAGE_SIZE,
                  num_pages: int | None = None,
                  prompt_bucket: int = PROMPT_BUCKET,
+                 chunk_tokens: int = CHUNK_TOKENS,
                  eos_id: int | None = None,
-                 prefix_cache: bool | None = None):
+                 prefix_cache: bool | None = None,
+                 slo: SLOTargets | None = None):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"serving engine drives token models; {cfg.name} has "
@@ -162,27 +181,40 @@ class Engine:
         self.float_pages = (paged_placement() == "float"
                             and paged_decode_supported(cfg, max_len,
                                                        page_size))
+        self.chunked = (chunked_prefill()
+                        and chunk_prefill_supported(cfg, max_len))
+        # preemption = usage-based admission + swap-to-host; both
+        # live on the floating pool's block-table indirection
+        self.preemption = (serve_preemption() and self.chunked
+                           and self.float_pages)
         if self.float_pages:
             self.kv = FloatingPageCache(cfg, max_len, num_slots,
                                         page_size=page_size,
-                                        num_pages=num_pages)
+                                        num_pages=num_pages,
+                                        usage_mode=self.preemption)
         else:
             self.kv = PagedKVCache(cfg, max_len, num_slots,
                                    page_size=page_size,
                                    num_pages=num_pages)
-        self.prefix_cache = (self.float_pages
+        # prefix hits are served by chunk-prefilling the unshared
+        # suffix — no chunked prefill, no prefix cache
+        self.prefix_cache = (self.float_pages and self.chunked
                              and (serve_prefix_cache()
                                   if prefix_cache is None
                                   else prefix_cache))
-        # prompt tokens still owed to decode-step replay per prefix-hit
-        # request, and the page keys to register when replay completes
-        self._replay: dict[int, deque] = {}
-        self._replay_keys: dict[int, list] = {}
+        self.chunk_tokens = max(1, min(chunk_tokens,
+                                       self.kv.slot_tokens))
+        self._staging: _Staging | None = None
+        self._preempted: deque[tuple[Request, dict]] = deque()
         self.prefill_calls = 0
         self.prefill_tokens_skipped = 0
         self.prefix_hits = 0
         self.pages_shared = 0
-        self.sched = Scheduler()
+        self.chunk_prefill_steps = 0
+        self.chunked_requests = 0
+        self.preemptions = 0
+        self.swap_ins = 0
+        self.sched = Scheduler(slo=slo)
         self.requests: dict[int, Request] = {}
 
     # -- admission -----------------------------------------------------
@@ -190,6 +222,17 @@ class Engine:
         # worst-case resident K/V: prompt + every decode-step write
         # (the last generated token is sampled but never written)
         return req.prompt_len + req.max_new - 1
+
+    def _admit_tokens(self, req: Request) -> int:
+        """The token count admission reserves pages for: actual usage
+        (prompt) plus one page of headroom under preemption — growth
+        past it extends page by page, preempting on a dry pool — or
+        the worst case when preemption is off (reservation-based
+        admission is then the no-corruption guarantee)."""
+        total = self._total_tokens(req)
+        if self.preemption:
+            return min(total, req.prompt_len + self.kv.page_size)
+        return total
 
     def submit(self, requests: list[Request]) -> None:
         for req in requests:
@@ -204,8 +247,11 @@ class Engine:
             al = self.kv.allocator
             need = al.pages_needed(self.kv._resident(total))
             if need > al.num_pages:
-                # can never be admitted: reject at submit instead of
-                # letting head-of-line FIFO livelock the queue
+                # can never be admitted — even alone in an empty pool
+                # (this reject is also what makes the preempt-retry
+                # loop terminate: a lone resident request always
+                # fits): reject at submit instead of letting
+                # head-of-line FIFO livelock the queue
                 raise PageExhausted(
                     f"request {req.rid}: worst-case reservation of "
                     f"{need} pages exceeds the whole pool "
@@ -213,6 +259,199 @@ class Engine:
             self.requests[req.rid] = req
         self.sched.submit(requests)
 
+    def _prefix_plan(self, req: Request) -> PrefixPlan | None:
+        """Look the request's page-aligned prompt prefix up in the
+        hash map (None when prefix caching is off)."""
+        if not self.prefix_cache:
+            return None
+        t = self.kv.page_size
+        keys = page_keys(req.prompt, t)
+        pages = self.kv.allocator.lookup(keys)
+        n_shared = len(pages)
+        if n_shared == 0:
+            return PrefixPlan(keys=keys, pages=[], suffix_from=0,
+                              cow_slack=0)
+        suffix_from = min(n_shared * t, req.prompt_len - 1)
+        cow_slack = 1 if n_shared * t >= req.prompt_len else 0
+        return PrefixPlan(keys=keys, pages=pages,
+                          suffix_from=suffix_from, cow_slack=cow_slack)
+
+    # -- the engine step -----------------------------------------------
+    def step(self) -> None:
+        if not self.chunked:
+            self._retire_and_refill()
+            self._admit_new_rows()
+            self._decode_once()
+            return
+        self._retire()
+        self._swap_in_preempted()
+        self._chunk_phase()
+        self._retire()          # an attached request may finish
+        self._decode_once()     # instantly (max_new == 1 / EOS)
+
+    # -- v2: retirement ------------------------------------------------
+    def _retire(self):
+        row = 0
+        while row < len(self.kv.rows):
+            if self.requests[self.kv.rows[row]].done:
+                self.kv.release(row)
+                self.kv.shrink(row)   # swapped-in last row re-checked
+            else:
+                row += 1
+
+    # -- v2: preemption ------------------------------------------------
+    def _swap_in_preempted(self):
+        """Resume preempted requests FIFO while their pages fit.  One
+        slot stays reserved for the in-flight staging request — its
+        attach must never find the batch full."""
+        while self._preempted:
+            limit = self.num_slots - (self._staging is not None)
+            if len(self.kv.rows) >= limit:
+                return
+            req, bundle = self._preempted[0]
+            admit = (min(self._total_tokens(req),
+                         bundle["depth"] + self.kv.page_size)
+                     if self.preemption else self._total_tokens(req))
+            try:
+                self.kv.swap_in(bundle, admit)
+            except PageExhausted:
+                return            # stays parked; retirement frees pages
+            self._preempted.popleft()
+            req.state = RequestState.RUNNING
+            self.swap_ins += 1
+
+    def _preempt_one(self) -> bool:
+        """Swap the SLO-chosen victim out to host; False when the
+        decode batch has nobody left to preempt."""
+        cands = [self.requests[rid] for rid in self.kv.rows
+                 if rid is not None]
+        victim = self.sched.pick_victim(cands)
+        if victim is None:
+            return False
+        bundle = self.kv.swap_out(self.kv.rows.index(victim.rid))
+        victim.state = RequestState.PREEMPTED
+        self._preempted.append((victim, bundle))
+        self.preemptions += 1
+        return True
+
+    def _grow_or_preempt(self, grow) -> None:
+        """Run a page-growing cache operation, preempting one victim
+        per ``PageExhausted`` until it fits.  Terminates: every
+        preemption frees pages, and a lone resident request always
+        fits (submit-time whole-pool reject)."""
+        while True:
+            try:
+                grow()
+                return
+            except PageExhausted:
+                if not (self.preemption and self._preempt_one()):
+                    raise
+
+    # -- v2: chunked prefill -------------------------------------------
+    def _begin_staging(self) -> bool:
+        """Pop the queue head into the staging slot when it fits under
+        ACTUAL free-page accounting (usage-based under preemption).
+        Preempted requests drain first — they hold finished work, and
+        refusing new admissions while any are parked guarantees their
+        re-admission is never starved."""
+        if self._preempted:
+            return False
+        head = self.sched.peek()
+        if head is None or len(self.kv.rows) >= self.num_slots:
+            return False
+        plan = self._prefix_plan(head)
+        admit = self._admit_tokens(head)
+        if plan is not None and plan.pages:
+            ok = self.kv.can_admit(admit, shared=plan.pages,
+                                   cow_slack=plan.cow_slack)
+            if not ok and self.kv.can_admit(admit):
+                # the hit needs MORE headroom than a cold admit (page
+                # revival + CoW slack, e.g. a minimal pool): serve it
+                # cold rather than livelock the FIFO head forever
+                plan = PrefixPlan(keys=plan.keys, pages=[],
+                                  suffix_from=0, cow_slack=0)
+                ok = True
+        else:
+            ok = self.kv.can_admit(admit)
+        if not ok:
+            return False          # stays queued (backpressure)
+        req = self.sched.pop()
+        pos, keys, row_cache = 0, None, None
+        if self.float_pages:
+            shared = plan.pages if plan is not None else []
+            self.kv.stage_admit(req.rid, admit, shared=shared,
+                                cow_slack=plan.cow_slack
+                                if plan is not None else 0)
+            keys = plan.keys if plan is not None else None
+            if shared:
+                pos = plan.suffix_from
+                self.prefix_hits += 1
+                self.prefill_tokens_skipped += pos
+                self.pages_shared += len(shared)
+                req.prefix_pages = len(shared)
+                req.prefill_skipped = pos
+        else:
+            self.kv.stage_admit(req.rid, admit)
+            row_cache = init_caches(self.cfg, 1, self.max_len,
+                                    per_slot=True)
+        self._staging = _Staging(req=req, pos=pos, keys=keys,
+                                 row_cache=row_cache)
+        self.chunked_requests += 1
+        return True
+
+    def _chunk_step(self) -> None:
+        """One (1, chunk_tokens) prefill chunk of the staging request:
+        write its next prompt tokens at its own depth, attend over its
+        resident history.  The final chunk emits the first output
+        token and attaches the request to the decode batch."""
+        st = self._staging
+        req, plen = st.req, st.req.prompt_len
+        chunk = self.chunk_tokens
+        n_real = min(chunk, plen - st.pos)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :n_real] = req.prompt[st.pos:st.pos + n_real]
+        if self.float_pages:
+            self._grow_or_preempt(
+                lambda: self.kv.stage_ensure(req.rid, st.pos,
+                                             st.pos + n_real))
+            self.kv.stage_stamp(req.rid, st.pos)
+            logits, self.kv.caches = self.decode(
+                self.params, self.kv.caches, jnp.asarray(toks))
+        else:
+            # identity placement: the chunk runs on a detached one-row
+            # cache; only the depth stamp moves between chunks
+            st.row_cache = {
+                name: map_cache_nodes(
+                    seg, lambda n: n._replace(
+                        idx=jnp.full_like(n.idx, st.pos)))
+                if seg is not None else None
+                for name, seg in st.row_cache.items()}
+            logits, st.row_cache = self.decode(
+                self.params, st.row_cache, jnp.asarray(toks))
+        self.chunk_prefill_steps += 1
+        st.pos += n_real
+        if st.pos < plen:
+            return
+        # last chunk: its final real logit is the first output token
+        first = int(jnp.argmax(logits[0, n_real - 1]))
+        if self.float_pages:
+            self.kv.stage_attach(req.rid, plen)
+            if st.keys:
+                self.kv.register_prompt(req.rid, st.keys)
+        else:
+            self.kv.stage_attach(req.rid, st.row_cache, plen)
+        self._staging = None
+        self.sched.on_token(req, first)
+
+    def _chunk_phase(self):
+        budget = self.sched.chunk_budget()
+        while budget > 0:
+            if self._staging is None and not self._begin_staging():
+                return
+            self._chunk_step()
+            budget -= 1
+
+    # -- v1: whole-prompt prefill admission (A/B fallback) -------------
     def _bucket_len(self, n: int) -> int:
         c = self.kv.slot_tokens
         if n >= c:
@@ -232,76 +471,24 @@ class Engine:
         self.sched.on_token(req, int(greedy_sample(logits)[0]))
         return one
 
-    def _prefix_plan(self, req: Request) -> PrefixPlan | None:
-        """Look the request's page-aligned prompt prefix up in the
-        hash map (None when prefix caching is off)."""
-        if not self.prefix_cache:
-            return None
-        t = self.kv.page_size
-        keys = page_keys(req.prompt, t)
-        pages = self.kv.allocator.lookup(keys)
-        n_shared = len(pages)
-        if n_shared == 0:
-            return PrefixPlan(keys=keys, pages=[], replay_from=0,
-                              cow_slack=0)
-        replay_from = min(n_shared * t, req.prompt_len - 1)
-        cow_slack = 1 if n_shared * t >= req.prompt_len else 0
-        return PrefixPlan(keys=keys, pages=pages,
-                          replay_from=replay_from, cow_slack=cow_slack)
-
     def _admissible_head(self):
-        """(head request, prefix plan) when the queue head fits under
-        the pool's actual free-page accounting, else None."""
+        """The head request when it fits under the pool's actual
+        free-page accounting, else None."""
         head = self.sched.peek()
-        if head is None:
+        if head is None or not self.kv.can_admit(
+                self._total_tokens(head)):
             return None
-        plan = self._prefix_plan(head)
-        total = self._total_tokens(head)
-        if plan is not None and plan.pages:
-            ok = self.kv.can_admit(total, shared=plan.pages,
-                                   cow_slack=plan.cow_slack)
-            if not ok and self.kv.can_admit(total):
-                # the hit needs MORE headroom than a cold admit (page
-                # revival + CoW slack, e.g. a minimal pool): serve it
-                # cold rather than livelock the FIFO head forever
-                plan = PrefixPlan(keys=plan.keys, pages=[],
-                                  replay_from=0, cow_slack=0)
-                ok = True
-        else:
-            ok = self.kv.can_admit(total)
-        return (head, plan) if ok else None   # else: stays queued
+        return head
 
-    def _admit(self, req: Request, plan: PrefixPlan | None,
-               row: int | None = None) -> None:
-        """Admit one popped request — prefix-hit (map shared pages,
-        queue the prompt-tail replay, NO prefill) or cold (B=1
-        prefill, insert, register prompt hashes)."""
-        total = self._total_tokens(req)
-        if plan is not None and plan.pages:
-            self.kv.admit_shared(req.rid, plan.pages, plan.replay_from,
-                                 total, plan.cow_slack, row=row)
-            self._replay[req.rid] = deque(
-                int(tok) for tok in req.prompt[plan.replay_from:])
-            self._replay_keys[req.rid] = plan.keys
-            self.prefix_hits += 1
-            self.prefill_tokens_skipped += plan.replay_from
-            self.pages_shared += len(plan.pages)
-            req.prefix_pages = len(plan.pages)
-            req.prefill_skipped = plan.replay_from
-            return
+    def _admit(self, req: Request, row: int | None = None) -> None:
+        """Admit one popped request: B=1 whole-prompt prefill, then
+        merge/scatter the row."""
         one = self._prefill_request(req)
+        total = self._total_tokens(req)
         if row is None:
             self.kv.append(req.rid, one, req.prompt_len, total)
         else:
             self.kv.refill(row, req.rid, one, req.prompt_len, total)
-        if plan is not None:
-            self.kv.register_prompt(req.rid, plan.keys)
-
-    # -- the engine step -----------------------------------------------
-    def step(self) -> None:
-        self._retire_and_refill()
-        self._admit_new_rows()
-        self._decode_once()
 
     def _retire_and_refill(self):
         row = 0
@@ -314,11 +501,9 @@ class Engine:
                 self.kv.release(row)
             head = self._admissible_head()
             if head is not None:
-                req, plan = head
-                self.sched.pop()
-                self._admit(req, plan, row=row)
-                # a cold refill may itself already be done (max_new ==
-                # 1 or instant EOS): the loop re-checks this row
+                self._admit(self.sched.pop(), row=row)
+                # a refill may itself already be done (max_new == 1
+                # or instant EOS): the loop re-checks this row
             else:
                 self.kv.shrink(row)
                 # the swapped-in last row is re-checked at this index
@@ -328,60 +513,65 @@ class Engine:
             head = self._admissible_head()
             if head is None:
                 break
-            req, plan = head
-            self.sched.pop()
-            self._admit(req, plan)
-            if self.requests[req.rid].done:       # instant finish
+            self._admit(self.sched.pop())
+            if head.done:                         # instant finish
                 self._retire_and_refill()
 
+    # -- decode --------------------------------------------------------
     def _decode_once(self):
-        rows = self.kv.rows
-        if not rows:
-            return
-        # feed: a replayed prompt token for prefix-hit rows still
-        # catching up, else the row's last sampled token
-        feed = np.zeros((len(rows), 1), np.int32)
-        for i, rid in enumerate(rows):
-            pending = self._replay.get(rid)
-            if pending:
-                feed[i, 0] = pending.popleft()
-            else:
-                feed[i, 0] = self.requests[rid].out[-1]
         if self.float_pages:
             # copy-on-write barrier + idx/block-table restamp: every
             # row's write-target page must be private BEFORE the
-            # in-graph append
-            self.kv.prepare_decode()
+            # in-graph append.  Growth past a usage reservation can
+            # exhaust the pool — preempt a victim and retry (the
+            # ensure pass is idempotent across retries)
+            self._grow_or_preempt(
+                lambda: self.kv.prepare_decode()
+                if self.kv.rows else None)
+        rows = self.kv.rows
+        if not rows:
+            return
+        feed = np.zeros((len(rows), 1), np.int32)
+        for i, rid in enumerate(rows):
+            feed[i, 0] = self.requests[rid].out[-1]
         logits, self.kv.caches = self.decode(
             self.params, self.kv.caches, jnp.asarray(feed))
         self.kv.advance()
         nxt = np.asarray(greedy_sample(logits))
         for i, rid in enumerate(list(rows)):
-            if rid in self._replay:
-                if self._replay[rid]:
-                    continue      # mid-replay: the sample predicts a
-                                  # prompt token we already have
-                # the last prompt token was just fed: this sample is
-                # the request's FIRST output token (stamps TTFT), and
-                # the row's full prompt pages are now written —
-                # publish their hashes
-                del self._replay[rid]
-                self.kv.register_prompt(
-                    rid, self._replay_keys.pop(rid))
             self.sched.on_token(self.requests[rid], int(nxt[i]))
 
     # -- driver --------------------------------------------------------
+    def _idle(self) -> bool:
+        return not (self.sched.queue or self.kv.rows
+                    or self._staging is not None or self._preempted)
+
     def run(self, requests: list[Request] | None = None, log=print):
         """Drain the queue; returns the requests that finished during
         THIS call (an engine instance can serve several runs — the jit
-        caches on its step functions carry over)."""
-        if requests:
-            self.submit(requests)
+        caches on its step functions carry over).  Requests with an
+        ``arrival_time`` are submitted open-loop at that offset from
+        the call's start; the rest are submitted up front."""
+        requests = requests or []
+        pending = deque(sorted(
+            (r for r in requests if r.arrival_time is not None),
+            key=lambda r: r.arrival_time))
+        now_batch = [r for r in requests if r.arrival_time is None]
+        if now_batch:
+            self.submit(now_batch)
         done_before = {rid for rid, r in self.requests.items() if r.done}
         toks_before = sum(len(r.out) for r in self.requests.values())
         t0 = time.monotonic()
         steps = 0
-        while self.sched.queue or self.kv.rows:
+        while pending or not self._idle():
+            now = time.monotonic() - t0
+            while pending and pending[0].arrival_time <= now:
+                self.submit([pending.popleft()])
+            if self._idle():
+                # nothing resident and the next arrival is in the
+                # future: sleep toward it instead of spinning
+                time.sleep(min(pending[0].arrival_time - now, 0.05))
+                continue
             self.step()
             steps += 1
             if steps > 100_000:
@@ -406,6 +596,10 @@ class Engine:
         s = self.sched.summary()
         s.update({
             "prefill_calls": self.prefill_calls,
+            "chunk_prefill_steps": self.chunk_prefill_steps,
+            "chunked_requests": self.chunked_requests,
+            "preemptions": self.preemptions,
+            "swap_ins": self.swap_ins,
             "prefix_hits": self.prefix_hits,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "pages_shared": self.pages_shared,

@@ -146,12 +146,21 @@ class PageAllocator:
     docstring)."""
 
     def __init__(self, num_pages: int, page_size: int = PAGE_SIZE,
-                 slot_tokens: int | None = None):
+                 slot_tokens: int | None = None,
+                 usage_mode: bool = False):
         assert num_pages > 0 and page_size > 0
         self.num_pages = num_pages
         self.page_size = page_size
         # per-slot ring capacity in tokens; None = unbounded rows
         self.slot_tokens = slot_tokens
+        # usage-based admission (Scheduler v2, docs/continuous-
+        # batching.md): admission reserves actual usage + small
+        # headroom instead of the worst case, and a request that
+        # outgrows its reservation EXTENDS it page by page —
+        # ``PageExhausted`` on extension is the engine's preemption
+        # trigger, not corruption.  False keeps the v1 invariant:
+        # outgrowing a reservation is an accounting bug.
+        self.usage_mode = usage_mode
         self._free = list(range(num_pages - 1, -1, -1))
         self._refcount = [0] * num_pages
         # refcount-0 pages kept addressable for prefix hits, oldest
@@ -258,10 +267,23 @@ class PageAllocator:
         return page
 
     def _alloc_private(self, bt: BlockTable) -> int:
-        assert bt.private < bt.reserved, \
-            (f"owner {bt.owner}: private page {bt.private + 1} would "
-             f"overrun its reservation of {bt.reserved} (allocator "
-             f"leak / accounting bug)")
+        if bt.private == bt.reserved:
+            # usage mode: the request outgrew its usage-based
+            # reservation — extend it one page IF every outstanding
+            # promise (plus this one) is still coverable; otherwise
+            # raise so the engine can preempt a victim and retry.
+            assert self.usage_mode, \
+                (f"owner {bt.owner}: private page {bt.private + 1} "
+                 f"would overrun its reservation of {bt.reserved} "
+                 f"(allocator leak / accounting bug)")
+            if self._outstanding + 1 > self.free_pages:
+                raise PageExhausted(
+                    f"owner {bt.owner}: reservation extension needs 1 "
+                    f"page but {self._outstanding} outstanding promises "
+                    f"already cover the {self.free_pages} allocatable "
+                    f"pages (preempt to proceed)")
+            bt.reserved += 1
+            self._outstanding += 1
         page = self._alloc_page()
         bt.private += 1
         self._outstanding -= 1
@@ -505,6 +527,32 @@ class PagedKVCache:
         self.rows[row] = owner
         self.lengths[row] = length
 
+    # -- chunked-prefill staging (admission / attach split) ------------
+    def stage_admit(self, owner: int, total_tokens: int) -> None:
+        """Admission only: commit the page reservation while the
+        request chunk-prefills into a detached one-row cache (the
+        engine's staging slot).  No device row exists yet."""
+        self.allocator.admit(owner, 0, self._resident(total_tokens))
+
+    def stage_attach(self, owner: int, one, length: int) -> int:
+        """Attach only: merge the finished staging row into the decode
+        batch and materialize its page accounting — the admission half
+        already ran in ``stage_admit``."""
+        self.allocator.grow(owner, self._resident(length))
+        assert len(self.rows) < self.num_slots
+        if self.caches is None or not self.rows:
+            self.caches = _first_row(one, jnp.int32(length))
+        else:
+            self.caches = _append_row(self.caches, one,
+                                      jnp.int32(length))
+        self.rows.append(owner)
+        self.lengths.append(length)
+        return len(self.rows) - 1
+
+    def stage_abort(self, owner: int) -> None:
+        """Drop a staged (not yet attached) request's reservation."""
+        self.allocator.release(owner)
+
     # -- retirement ----------------------------------------------------
     def release(self, row: int) -> None:
         """Free the row's pages (request finished).  The row must then
@@ -583,6 +631,36 @@ def _pool_copy_page(pool, src, dst):
         v_scale=cp(pool.v_scale) if fp8 else None)
 
 
+@jax.jit
+def _pool_get_page(pool, src):
+    """Read one physical page (all layers, payloads + scales) out of
+    the pool — the swap-OUT half of preemption.  Fixed shape (one
+    page), so swapping any victim size reuses one compiled gather."""
+    if pool.k_scale is None:
+        return pool.k[:, src], pool.v[:, src]
+    return (pool.k[:, src], pool.v[:, src],
+            pool.k_scale[:, src], pool.v_scale[:, src])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_put_page(pool, data, dst):
+    """Write one swapped page's payload back into the pool — the
+    swap-IN half of preemption.  ``data`` is the tuple
+    ``_pool_get_page`` returned (bitwise round-trip: payloads AND
+    scales are copied verbatim, never re-quantized)."""
+
+    def put(buf, d):
+        return buf.at[:, dst].set(d.astype(buf.dtype))
+
+    if pool.k_scale is None:
+        return pool._replace(k=put(pool.k, data[0]),
+                             v=put(pool.v, data[1]))
+    return pool._replace(
+        k=put(pool.k, data[0]), v=put(pool.v, data[1]),
+        k_scale=put(pool.k_scale, data[2]),
+        v_scale=put(pool.v_scale, data[3]))
+
+
 class FloatingPageCache:
     """Floating-placement device cache: one global page pool per
     layer, host block tables restamped into the device leaves before
@@ -594,7 +672,8 @@ class FloatingPageCache:
 
     def __init__(self, cfg, max_len: int, num_slots: int,
                  page_size: int = PAGE_SIZE,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 usage_mode: bool = False):
         assert paged_decode_supported(cfg, max_len, page_size), \
             (cfg.family, max_len, page_size)
         self.cfg = cfg
@@ -607,7 +686,8 @@ class FloatingPageCache:
         if num_pages is None:
             num_pages = num_slots * self.pages_per_slot
         self.allocator = PageAllocator(num_pages, page_size,
-                                       slot_tokens=self.slot_tokens)
+                                       slot_tokens=self.slot_tokens,
+                                       usage_mode=usage_mode)
         self.num_pages = num_pages
         self.cow_copies = 0
         self.rows: list[int | None] = []
@@ -666,25 +746,125 @@ class FloatingPageCache:
         self.rows[row] = owner
         self.lengths[row] = length
 
-    def admit_shared(self, owner: int, shared_pages: list[int],
-                     depth: int, total_tokens: int, cow_slack: int,
-                     row: int | None = None) -> int:
-        """Admit a PREFIX-HIT request: its leading pages map
-        copy-on-write onto ``shared_pages`` (no prefill ran — the
-        engine replays the remaining prompt tokens through decode
-        steps from ``depth``).  Returns the batch row."""
+    # -- chunked-prefill staging (admission / attach split) ------------
+    def stage_admit(self, owner: int, total_tokens: int, shared=(),
+                    cow_slack: int = 0) -> None:
+        """Admission only: commit the reservation and map any
+        prefix-hit ``shared`` pages (refcounted) while the request
+        chunk-prefills its unshared suffix straight into the pool.
+        No batch row exists yet — ``stage_stamp`` exposes the staging
+        request's pages to the (1, chunk) step instead."""
         self.allocator.admit(owner, 0, self._resident(total_tokens),
-                             shared=shared_pages, cow_slack=cow_slack)
+                             shared=shared, cow_slack=cow_slack)
+
+    def stage_ensure(self, owner: int, lo: int, hi: int) -> None:
+        """Make every page that prompt positions [lo, hi) touch
+        writable before a chunk step: fresh pages past the frontier, a
+        copy-on-write only for the full-hit case (the chunk's first
+        page is shared/hashed).  May raise ``PageExhausted`` in usage
+        mode — the engine's preemption trigger."""
+        t = self.page_size
+        for j in range(lo // t, (hi - 1) // t + 1):
+            kind, src, dst = self.allocator.ensure_writable(owner, j)
+            if kind == "cow":
+                self.cow_copies += 1
+                self._wake()
+                s, d = jnp.int32(src), jnp.int32(dst)
+                self.caches = {
+                    name: _pool_copy_page(seg, s, d)
+                    if seg is not None else None
+                    for name, seg in self.caches.items()}
+
+    def stage_stamp(self, owner: int, depth: int) -> None:
+        """Stamp the device idx/block-table leaves to ONE staging row
+        ((L, 1) / (L, 1, NP)) so a (1, chunk) step writes ``owner``'s
+        pages starting at ``depth``.  Unassigned table entries point
+        at the trash row — a chunk's padded tail garbage lands there,
+        never in another request's page."""
         self._wake()
-        if row is None:
-            assert len(self.rows) < self.num_slots
-            self.rows.append(owner)
-            self.lengths.append(depth)
-            return len(self.rows) - 1
-        assert self.rows[row] is None
-        self.rows[row] = owner
-        self.lengths[row] = depth
-        return row
+        pages = self.allocator.table(owner).pages
+        bt = np.full((1, self.pages_per_slot), self.num_pages,
+                     np.int32)
+        bt[0, :len(pages)] = pages
+        idx = np.full((1,), depth, np.int32)
+
+        def stamp(node):
+            n_l = node.idx.shape[0]
+            return node._replace(
+                idx=jnp.asarray(np.broadcast_to(idx, (n_l, 1)).copy()),
+                block_table=jnp.asarray(
+                    np.broadcast_to(bt, (n_l, 1,
+                                         self.pages_per_slot)).copy()))
+
+        self.caches = {name: map_cache_nodes(seg, stamp)
+                       if seg is not None else None
+                       for name, seg in self.caches.items()}
+
+    def stage_attach(self, owner: int, depth: int) -> int:
+        """Attach only: join the decode batch at ``depth``.  Pure
+        host-list surgery — the pages are already written and the
+        idx/block-table leaves are restamped before the next decode."""
+        assert len(self.rows) < self.num_slots
+        self.rows.append(owner)
+        self.lengths.append(depth)
+        return len(self.rows) - 1
+
+    def stage_abort(self, owner: int) -> None:
+        """Drop a staged (not yet attached) request's pages +
+        reservation."""
+        self.allocator.release(owner)
+
+    # -- preemption (swap-to-host) -------------------------------------
+    def swap_out(self, row: int) -> dict:
+        """Preempt: copy the row's resident pages (payloads AND
+        scales, all layers — bitwise, never re-quantized) to a
+        host-side store, release them and drop the row from the
+        decode batch.  Returns the bundle ``swap_in`` consumes.
+        Shared prefix pages are copied too — on swap-in every page
+        comes back private (the dedup is lost; the honest cost of a
+        preemption)."""
+        owner = self.rows[row]
+        depth = self.lengths[row]
+        # only the pages covering [0, depth): an already-ensured but
+        # still-unwritten frontier page holds nothing worth saving,
+        # and swap_in re-admits at exactly pages_for(depth)
+        n_live = pages_for(depth, self.page_size)
+        pages = list(self.allocator.table(owner).pages)[:n_live]
+        store = []
+        for p in pages:
+            src = jnp.int32(p)
+            store.append({
+                name: jax.device_get(_pool_get_page(seg, src))
+                if seg is not None else None
+                for name, seg in self.caches.items()})
+        self.allocator.release(owner)
+        self.rows[row] = None
+        self.shrink(row)
+        return {"owner": owner, "depth": depth, "pages": store}
+
+    def swap_in(self, bundle: dict, total_tokens: int) -> int:
+        """Re-admit a preempted request: allocate fresh (private)
+        pages for its recorded depth, write the swapped payload back
+        verbatim and rejoin the decode batch at that depth.  Raises
+        ``PageExhausted`` when it doesn't fit yet (stays parked)."""
+        owner, depth = bundle["owner"], bundle["depth"]
+        assert len(self.rows) < self.num_slots
+        self.allocator.admit(owner, depth,
+                             self._resident(total_tokens))
+        bt = self.allocator.table(owner)
+        assert len(bt.pages) == len(bundle["pages"])
+        self._wake()
+        for p, per_seg in zip(bt.pages, bundle["pages"]):
+            dst = jnp.int32(p)
+            self.caches = {
+                name: _pool_put_page(
+                    seg, tuple(jnp.asarray(a) for a in per_seg[name]),
+                    dst)
+                if seg is not None else None
+                for name, seg in self.caches.items()}
+        self.rows.append(owner)
+        self.lengths.append(depth)
+        return len(self.rows) - 1
 
     def register_prompt(self, owner: int, keys: list) -> int:
         """Publish the owner's FULL prompt pages in the prefix-hash
@@ -743,12 +923,15 @@ class FloatingPageCache:
         """Rebuild the (B,)-shaped idx and (B, NP)-shaped block-table
         leaves (with the stacked layers axis in front) from the host
         rows/lengths/tables.  Unassigned block-table tail entries
-        point at page 0 — the kernel still DMAs that tile but every
-        score in it is masked (slot >= n_valid), so the contents are
-        never attended."""
+        point at the TRASH physical row (index ``num_pages`` — the
+        extra row ``init_paged_pools`` allocates): decode masks them
+        anyway (slot >= n_valid), and a chunked-prefill step's padded
+        tail positions scatter their garbage there instead of into a
+        live page."""
         b = len(self.rows)
         idx = np.asarray(self.lengths, np.int32)
-        bt = np.zeros((b, self.pages_per_slot), np.int32)
+        bt = np.full((b, self.pages_per_slot), self.num_pages,
+                     np.int32)
         for i, owner in enumerate(self.rows):
             pages = self.allocator.table(owner).pages
             bt[i, :len(pages)] = pages

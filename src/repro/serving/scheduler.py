@@ -2,16 +2,22 @@
 (docs/continuous-batching.md).
 
 Host-side and model-free by design: the scheduler owns the FIFO
-queue, request state transitions (QUEUED -> RUNNING -> FINISHED),
-stop conditions (EOS token / ``max_new`` budget) and per-request
-latency metrics (TTFT = submit -> first token, TPOT = mean inter-token
-gap after the first).  The engine asks *whether* the head of the
-queue fits (``PageAllocator.can_admit`` — page-exhaustion
-backpressure keeps it queued, head-of-line FIFO: a large stuck
-request is not overtaken) and tells the scheduler *what happened*
-(``on_token``); everything jax-shaped lives in ``engine``/
-``paged_cache``.  That split keeps refill order, retirement and
-backpressure unit-testable without building a model.
+queue, request state transitions (QUEUED -> RUNNING [-> PREEMPTED ->
+RUNNING] -> FINISHED), stop conditions (EOS token / ``max_new``
+budget), per-request latency metrics (TTFT = submit -> first token,
+TPOT = mean inter-token gap after the first) and the SLO policy knobs
+built on them: the per-step chunked-prefill budget and preemption
+victim choice are decided here, against ``SLOTargets``, from the
+latencies the scheduler already measures.  The engine asks *whether*
+the head of the queue fits (``PageAllocator.can_admit`` —
+page-exhaustion backpressure keeps it queued, head-of-line FIFO: a
+large stuck request is not overtaken), *how many* prompt chunks to
+interleave this step (``chunk_budget``) and *whom* to swap out when
+the pool runs dry (``pick_victim``), and tells the scheduler *what
+happened* (``on_token``); everything jax-shaped lives in ``engine``/
+``paged_cache``.  That split keeps refill order, retirement,
+backpressure and the SLO policies unit-testable without building a
+model.
 """
 
 from __future__ import annotations
@@ -27,6 +33,7 @@ import numpy as np
 class RequestState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -34,12 +41,16 @@ class RequestState(enum.Enum):
 class Request:
     """One generation request.  ``out`` accumulates generated token
     ids (the first is produced by prefill); timestamps feed the
-    TTFT/TPOT metrics."""
+    TTFT/TPOT metrics.  ``arrival_time`` (seconds after the trace
+    epoch) makes ``Engine.run`` model an open-loop arrival process:
+    the request is submitted — and its TTFT clock started — only once
+    that offset has elapsed, instead of submit-all-at-once."""
 
     rid: int
     prompt: np.ndarray           # (S,) int32
     max_new: int
     eos_id: int | None = None
+    arrival_time: float | None = None
     out: list = dataclasses.field(default_factory=list)
     state: RequestState = RequestState.QUEUED
     t_submit: float | None = None
@@ -48,7 +59,8 @@ class Request:
     # stamped at admission by the engine's prefix-cache plan
     # (docs/paged-attention.md): physical pages mapped from prefix-
     # hash hits, and prompt tokens whose prefill was skipped (served
-    # from the shared pages + decode-step replay instead)
+    # from the shared pages; the unshared suffix chunk-prefills at an
+    # offset)
     prefix_pages: int = 0
     prefill_skipped: int = 0
 
@@ -75,6 +87,16 @@ class Request:
         return (self.t_last - self.t_first) / (len(self.out) - 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOTargets:
+    """Latency service-level objectives the v2 policies steer against
+    (docs/continuous-batching.md).  Defaults are loose smoke-scale
+    values; benchmarks/launchers set real ones."""
+
+    ttft_s: float = 1.0          # target time-to-first-token
+    tpot_s: float = 0.1          # target per-output-token gap
+
+
 def hit_stop(req: Request, token: int) -> bool:
     """THE stop rule (one source of truth — the paged scheduler and
     the legacy Server both consult it): EOS token, or the ``max_new``
@@ -84,11 +106,13 @@ def hit_stop(req: Request, token: int) -> bool:
 
 
 class Scheduler:
-    """FIFO admission + retirement bookkeeping (see module docstring).
-    ``clock`` is injectable for deterministic unit tests."""
+    """FIFO admission + retirement bookkeeping + SLO policy (see
+    module docstring).  ``clock`` is injectable for deterministic unit
+    tests."""
 
-    def __init__(self, clock=time.monotonic):
+    def __init__(self, clock=time.monotonic, slo: SLOTargets | None = None):
         self.clock = clock
+        self.slo = slo or SLOTargets()
         self.queue: deque[Request] = deque()
         self.all: list[Request] = []
 
@@ -123,21 +147,68 @@ class Scheduler:
             req.state = RequestState.FINISHED
         return req.done
 
+    # -- SLO policy ----------------------------------------------------
+    def chunk_budget(self) -> int:
+        """How many chunked-prefill steps the engine may interleave
+        before the next decode step.  Deterministic and model-free:
+        shrink to 1 when any running request's observed TPOT already
+        exceeds its target (prefill chunks stall decode); boost when
+        the queue head's wait approaches the TTFT target (its first
+        token needs the whole prompt prefilled).  TTFT pressure wins
+        ties — under heavy traffic the queue is where SLOs die."""
+        budget = 2
+        running = [r for r in self.all
+                   if r.state is RequestState.RUNNING]
+        tpots = [r.tpot for r in running if r.tpot is not None]
+        if tpots and max(tpots) > self.slo.tpot_s:
+            budget = 1
+        head = self.queue[0] if self.queue else None
+        if head is not None and head.t_submit is not None:
+            if self.clock() - head.t_submit > 0.5 * self.slo.ttft_s:
+                budget = max(budget, 4)
+        return budget
+
+    def pick_victim(self, candidates) -> Request | None:
+        """Preemption victim among decode-resident requests: the one
+        with the most TPOT headroom (its SLO tolerates a swap stall
+        best); ties break LIFO (latest submit — the least sunk decode
+        work is parked).  Deterministic given the candidates."""
+        if not candidates:
+            return None
+
+        def key(r: Request):
+            tpot = r.tpot
+            headroom = (self.slo.tpot_s - tpot if tpot is not None
+                        else self.slo.tpot_s)
+            return (headroom, r.t_submit or 0.0)
+
+        return max(candidates, key=key)
+
     # -- metrics -------------------------------------------------------
     def summary(self) -> dict:
-        """Aggregate serving metrics over every finished request."""
+        """Aggregate serving metrics over every finished request.
+        p50/p99 percentiles ride alongside the means — heavy-traffic
+        scheduling is judged on tails, not averages."""
         done = [r for r in self.all if r.done]
         toks = sum(len(r.out) for r in done)
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tpots = [r.tpot for r in done if r.tpot is not None]
         span = (max((r.t_last for r in done), default=0.0)
                 - min((r.t_submit for r in done), default=0.0))
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else float("nan")
+
         return {
             "requests": len(done),
             "tokens": toks,
             "tok_per_s": toks / span if span > 0 else float("nan"),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
             "mean_tpot_s": float(np.mean(tpots)) if tpots else float("nan"),
+            "p50_ttft_s": pct(ttfts, 50),
+            "p99_ttft_s": pct(ttfts, 99),
+            "p50_tpot_s": pct(tpots, 50),
+            "p99_tpot_s": pct(tpots, 99),
             "prefix_hit_requests": sum(r.prefix_pages > 0 for r in done),
             "prefill_tokens_skipped": sum(r.prefill_skipped
                                           for r in done),

@@ -343,6 +343,22 @@ def make_prefill_step(cfg, max_len: int, scales=None):
     return prefill_step
 
 
+def make_chunk_prefill_step(cfg, scales=None):
+    """Chunked-prefill step — a documented alias of
+    ``make_decode_step``.
+
+    One mixed-step graph serves both shapes: the engine feeds (B, 1)
+    decode tokens and (1, C) prompt chunks through the SAME jitted
+    callable; jit shape-specializes each, and the (1, C) trace takes
+    decode mode's S > 1 path (``attention._chunk_attention``) — the
+    chunk is written at the slot's current depth (the start position
+    and per-slot RoPE offsets ride in the caches' ``idx``), attending
+    the already-resident pages via the block table plus an in-chunk
+    causal mask.  ONE chunk shape replaces v1's per-16-token-bucket
+    prefill compiles (docs/continuous-batching.md)."""
+    return make_decode_step(cfg, scales=scales)
+
+
 def make_decode_step(cfg, scales=None):
     defs = model_defs(cfg)
     mask = quant_mask_tree(defs)

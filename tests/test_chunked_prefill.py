@@ -1,0 +1,402 @@
+"""Scheduler v2: chunked prefill, preemption with swap-to-host, and
+usage-based admission (docs/continuous-batching.md).
+
+- chunked-vs-whole-prompt parity: the v2 engine (prompts chunk-
+  prefilled at an offset through the mixed decode-mode step) produces
+  token-for-token the same outputs as the v1 whole-prompt-prefill
+  engine on a bf16 cache, ref AND interpret backends — modulo genuine
+  argmax ties: the f32 score/softmax reductions run at a different
+  width (chunk vs padded prompt), so logits move by a few bf16 ULP,
+  and on a random-weights smoke model (near-uniform logits) that can
+  flip a tie.  Every divergence must be between tokens the reference
+  whole-prompt forward scores within ULP noise of its max — a real
+  chunking bug (garbage attended, wrong mask) shifts logits far more
+  and fails the tie check.  The fp8 cache leg asserts batch-
+  composition independence (mixed vs solo, exact) — chunked fp8
+  cannot be token-identical to whole-prompt because chunk attention
+  reads the quantized history back while whole-prompt prefill attends
+  the fresh bf16 values;
+- a prefix-hit's unshared suffix chunk-prefills to exactly the same
+  tokens as a cold serve of the same prompt (the replay path this
+  replaced is gone);
+- preempt/swap-out/swap-in round-trips the victim's pages BITWISE
+  (payloads and scales) and the resumed request finishes with exactly
+  the tokens solo serving produces;
+- usage-based admission packs more concurrency than v1's worst-case
+  reservation on the same minimal pool, preempts on growth, and
+  still matches solo outputs;
+- the scheduler's SLO policy units: chunk_budget reacts to TTFT/TPOT
+  pressure, pick_victim chooses the most TPOT headroom — model-free,
+  injectable clock.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.formats import BF16_CONFIG
+from repro.models.layers import init_tree
+from repro.models.transformer import model_defs
+from repro.serving import Engine, Request, Scheduler, SLOTargets
+
+
+def _cfg(kv_dtype="bf16"):
+    return get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=BF16_CONFIG, kv_cache_dtype=kv_dtype)
+
+
+def _params(cfg):
+    return init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+
+
+def _requests(cfg, lens, max_new=4, seed=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab, size=n,
+                                        dtype=np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(lens)]
+
+
+def _solo(cfg, params, reqs, max_len, **kw):
+    outs = []
+    for r in reqs:
+        s = Request(rid=1000 + r.rid, prompt=r.prompt.copy(),
+                    max_new=r.max_new)
+        Engine(cfg, params, num_slots=1, max_len=max_len, **kw).run(
+            [s], log=None)
+        outs.append(s.out)
+    return outs
+
+
+# prompt lengths straddle chunk boundaries on purpose: shorter than a
+# chunk, one exact chunk, chunk+1, and several chunks with a tail
+CHUNK = 8
+MIXED_LENS = [5, 8, 9, 29]
+
+
+# ---------------------------------------------------------------------------
+# Chunked vs whole-prompt parity — the acceptance contract
+# ---------------------------------------------------------------------------
+
+# bf16 ULP at the smoke model's logit magnitudes (~2-4) is 0.016-0.03;
+# a flip is a tie only when BOTH candidates sit this close to the
+# reference max.  A wrong-history bug shifts logits by O(0.1-1).
+_TIE_TOL = 0.08
+
+
+def _assert_parity_mod_ties(eng, prompt, got, want):
+    """got == want, or they diverge at a genuine argmax tie: at the
+    first differing step both candidate tokens must score within
+    _TIE_TOL of the max in a reference whole-sequence forward (v1's
+    prefill step over prompt + the agreed tokens).  After a tie flip
+    the continuations legitimately diverge, so comparison stops."""
+    if got == want:
+        return True
+    t = next(i for i, (g, w) in enumerate(zip(got, want)) if g != w)
+    seq = np.concatenate([np.asarray(prompt, np.int32),
+                          np.asarray(want[:t], np.int32)])
+    toks = np.zeros((1, eng._bucket_len(len(seq))), np.int32)
+    toks[0, :len(seq)] = seq
+    logits, _ = eng.prefill(eng.params, {"tokens": jnp.asarray(toks)},
+                            jnp.int32(len(seq) - 1))
+    lg = np.asarray(logits, np.float32).reshape(-1)
+    top = float(lg.max())
+    for tok in (got[t], want[t]):
+        assert top - float(lg[tok]) <= _TIE_TOL, \
+            (got, want, t, tok, float(lg[tok]), top)
+    return False
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_chunked_matches_whole_prompt_prefill_bf16(monkeypatch,
+                                                   backend):
+    """v2 (chunked) and v1 (whole-prompt B=1 prefill) serve the same
+    trace token-for-token on a bf16 cache, modulo ULP-tied argmax
+    flips (see module docstring) — every divergence is verified to be
+    a tie against a reference whole-sequence forward."""
+    monkeypatch.setenv("REPRO_KERNELS", backend)
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+    protos = _requests(cfg, MIXED_LENS, max_new=5)
+
+    def serve(chunked):
+        monkeypatch.setenv("REPRO_CHUNKED_PREFILL",
+                           "1" if chunked else "0")
+        reqs = [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=5)
+                for r in protos]
+        eng = Engine(cfg, params, num_slots=3, max_len=64,
+                     chunk_tokens=CHUNK)
+        assert eng.chunked == chunked
+        eng.run(reqs, log=None)
+        assert all(r.done and len(r.out) == 5 for r in reqs)
+        if chunked:
+            assert eng.prefill_calls == 0
+            assert eng.chunked_requests == len(reqs)
+            # 1 + 1 + 2 + 4 chunks for MIXED_LENS under CHUNK=8
+            assert eng.chunk_prefill_steps == 8
+        else:
+            assert eng.prefill_calls == len(reqs)
+        return eng, [r.out for r in reqs]
+
+    eng, got = serve(chunked=True)
+    _, want = serve(chunked=False)
+    exact = sum(_assert_parity_mod_ties(eng, p.prompt, g, w)
+                for p, g, w in zip(protos, got, want))
+    assert exact >= len(protos) - 1, (got, want)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_chunked_fp8_is_batch_composition_independent(monkeypatch,
+                                                      backend):
+    """fp8-cache chunked serving is exact w.r.t. batch composition:
+    mixed-depth concurrent serving matches per-request solo serving
+    token-for-token (each chunk reads only its own request's pages)."""
+    monkeypatch.setenv("REPRO_KERNELS", backend)
+    cfg = _cfg("fp8")
+    params = _params(cfg)
+    reqs = _requests(cfg, MIXED_LENS, max_new=4)
+    eng = Engine(cfg, params, num_slots=3, max_len=64,
+                 chunk_tokens=CHUNK)
+    assert eng.chunked
+    eng.run(reqs, log=None)
+    solo = _solo(cfg, params, reqs, max_len=64, chunk_tokens=CHUNK)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+@pytest.mark.parametrize("placement", ["float", "identity"])
+def test_chunked_placements_agree(monkeypatch, placement):
+    """The identity-placement chunk path (detached one-row staging
+    cache) and the float path (pool scatter through the block table)
+    produce the same tokens as v1 whole-prompt prefill."""
+    monkeypatch.setenv("REPRO_PAGED_PLACEMENT", placement)
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+
+    def serve(chunked):
+        monkeypatch.setenv("REPRO_CHUNKED_PREFILL",
+                           "1" if chunked else "0")
+        reqs = _requests(cfg, [7, 19], max_new=4, seed=2)
+        eng = Engine(cfg, params, num_slots=2, max_len=32,
+                     chunk_tokens=CHUNK)
+        assert eng.float_pages == (placement == "float")
+        eng.run(reqs, log=None)
+        return [r.out for r in reqs]
+
+    assert serve(chunked=True) == serve(chunked=False)
+
+
+def test_prefix_hit_suffix_chunks_match_cold():
+    """A prefix hit chunk-prefills only its unshared suffix at an
+    offset; its outputs must be exactly a cold serve's (bf16)."""
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab, size=32, dtype=np.int32)
+    mk = lambda rid, tail: Request(
+        rid=rid, prompt=np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab, size=tail,
+                                  dtype=np.int32)])
+        if tail else prefix.copy(), max_new=4)
+    donor, partial, full = mk(0, 0), mk(1, 9), mk(2, 0)
+    eng = Engine(cfg, params, num_slots=2, max_len=64, chunk_tokens=8)
+    eng.run([donor], log=None)
+    eng.run([partial, full], log=None)
+    assert eng.prefix_hits == 2
+    assert partial.prefill_skipped == 32      # partial: exact pages
+    assert full.prefill_skipped == 31         # full: last token chunks
+    cold = _solo(cfg, params, [partial, full], max_len=64,
+                 chunk_tokens=8, prefix_cache=False)
+    assert partial.out == cold[0]
+    assert full.out == cold[1]
+
+
+# ---------------------------------------------------------------------------
+# Preemption: bitwise swap round-trip, usage admission
+# ---------------------------------------------------------------------------
+
+
+def test_swap_out_in_round_trip_is_bitwise():
+    """swap_out -> swap_in restores the victim's pages bit-for-bit:
+    payloads AND scales, every layer (fp8 cache — requantization
+    would show up here as changed bytes)."""
+    cfg = _cfg("fp8")
+    params = _params(cfg)
+    eng = Engine(cfg, params, num_slots=2, max_len=64, chunk_tokens=8)
+    assert eng.preemption
+    req = _requests(cfg, [21], max_new=8)[0]
+    eng.submit([req])
+    for _ in range(4):                        # attach + a few decodes
+        eng.step()
+    assert not req.done
+    row = eng.kv.rows.index(req.rid)
+    pages_before = list(eng.kv.allocator.table(req.rid).pages)
+
+    def snap(pages):
+        out = {}
+        for name, seg in eng.kv.caches.items():
+            if seg is None:
+                continue
+            for leaf in ("k", "v", "k_scale", "v_scale"):
+                buf = getattr(seg, leaf, None) if hasattr(seg, leaf) \
+                    else None
+                if buf is not None:
+                    out[(name, leaf)] = np.asarray(buf[:, pages])
+        return out
+
+    before = snap(pages_before)
+    bundle = eng.kv.swap_out(row)
+    assert req.rid not in eng.kv.rows
+    eng.kv.swap_in(bundle, req.prompt_len + req.max_new - 1)
+    after = snap(eng.kv.allocator.table(req.rid).pages)
+    assert before.keys() == after.keys() and len(before) > 0
+    for key in before:
+        assert np.array_equal(before[key], after[key]), key
+
+
+def test_preemption_resumes_with_solo_outputs():
+    """A pool far below worst-case reservations: usage admission
+    packs requests concurrently, growth preempts victims to host, and
+    every request still finishes with exactly its solo tokens."""
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+    reqs = _requests(cfg, [12, 12, 12, 12], max_new=40, seed=4)
+    # worst case is 4 pages/request; 6 pages can't hold two worst
+    # cases, but usage admission (1 page prompt + 1 headroom) packs 3
+    eng = Engine(cfg, params, num_slots=3, max_len=64, chunk_tokens=8,
+                 num_pages=6, prefix_cache=False)
+    assert eng.preemption
+    eng.run(reqs, log=None)
+    assert all(r.done and len(r.out) == 40 for r in reqs)
+    assert eng.preemptions > 0 and eng.swap_ins == eng.preemptions
+    al = eng.kv.allocator
+    assert al.free_pages == al.num_pages      # everything released
+    solo = _solo(cfg, params, reqs, max_len=64, chunk_tokens=8,
+                 prefix_cache=False)
+    for r, expect in zip(reqs, solo):
+        assert r.out == expect, (r.rid, r.out, expect)
+
+
+def test_usage_admission_outpacks_v1_reservation(monkeypatch):
+    """On the same minimal pool, v1's worst-case reservation can only
+    serve one request at a time; v2's usage-based admission runs them
+    concurrently (observed: a multi-row decode batch ever exists)."""
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+
+    def peak_rows(chunked):
+        monkeypatch.setenv("REPRO_CHUNKED_PREFILL",
+                           "1" if chunked else "0")
+        reqs = _requests(cfg, [12, 12, 12], max_new=40, seed=5)
+        eng = Engine(cfg, params, num_slots=3, max_len=64,
+                     chunk_tokens=8, num_pages=6, prefix_cache=False)
+        eng.submit(reqs)
+        peak = 0
+        while not eng._idle():
+            eng.step()
+            peak = max(peak, len(eng.kv.rows))
+        assert all(r.done for r in reqs)
+        return peak
+
+    assert peak_rows(chunked=False) == 1      # 4-page worst case x2 > 6
+    assert peak_rows(chunked=True) >= 2       # usage packs the pool
+
+
+# ---------------------------------------------------------------------------
+# SLO policy units (model-free)
+# ---------------------------------------------------------------------------
+
+
+def _clock():
+    state = {"t": 0.0}
+
+    def now():
+        return state["t"]
+
+    return state, now
+
+
+def test_chunk_budget_reacts_to_slo_pressure():
+    state, now = _clock()
+    sched = Scheduler(clock=now, slo=SLOTargets(ttft_s=1.0,
+                                                tpot_s=0.1))
+    assert sched.chunk_budget() == 2          # idle default
+    # a running request blowing its TPOT target shrinks the budget
+    slow = Request(rid=0, prompt=np.zeros(4, np.int32), max_new=10)
+    sched.submit([slow])
+    sched.pop()
+    sched.on_token(slow, 1)
+    state["t"] = 0.3                          # 300 ms gap > 100 ms SLO
+    sched.on_token(slow, 2)
+    assert sched.chunk_budget() == 1
+    # a queue head nearing its TTFT target boosts it (TTFT wins)
+    waiting = Request(rid=1, prompt=np.zeros(4, np.int32), max_new=1)
+    sched.submit([waiting])
+    state["t"] += 0.6                         # waited 0.6 > 0.5*ttft
+    assert sched.chunk_budget() == 4
+
+
+def test_pick_victim_prefers_tpot_headroom():
+    state, now = _clock()
+    sched = Scheduler(clock=now, slo=SLOTargets(tpot_s=0.1))
+    a, b = (Request(rid=i, prompt=np.zeros(4, np.int32), max_new=10)
+            for i in range(2))
+    sched.submit([a])
+    state["t"] = 0.01
+    sched.submit([b])
+    for r, gap in ((a, 0.09), (b, 0.01)):
+        sched.pop()
+        sched.on_token(r, 1)
+        state["t"] += gap
+        sched.on_token(r, 2)
+    # a runs at 90 ms/token (10 ms headroom), b at 10 ms (90 ms):
+    # b tolerates the swap stall best
+    assert sched.pick_victim([a, b]) is b
+    assert sched.pick_victim([]) is None
+    # no-history candidates tie at full headroom; latest submit loses
+    c, d = (Request(rid=2 + i, prompt=np.zeros(4, np.int32),
+                    max_new=10) for i in range(2))
+    state["t"] = 1.0
+    sched.submit([c])
+    state["t"] = 2.0
+    sched.submit([d])
+    assert sched.pick_victim([c, d]) is d
+
+
+def test_summary_reports_latency_percentiles():
+    state, now = _clock()
+    sched = Scheduler(clock=now)
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new=2)
+            for i in range(3)]
+    sched.submit(reqs)
+    for i, r in enumerate(reqs):
+        sched.pop()
+        state["t"] = float(i + 1)             # TTFTs 1, 2, 3 s
+        sched.on_token(r, 1)
+        state["t"] += 0.1 * (i + 1)           # TPOTs 0.1, 0.2, 0.3 s
+        sched.on_token(r, 2)
+    s = sched.summary()
+    assert s["p50_ttft_s"] == pytest.approx(2.0)
+    assert s["p99_ttft_s"] == pytest.approx(2.98)
+    assert s["p50_tpot_s"] == pytest.approx(0.2)
+    assert s["p99_tpot_s"] == pytest.approx(0.298)
+
+
+def test_open_loop_arrivals_honor_offsets():
+    """``Request.arrival_time`` turns run() into an open-loop driver:
+    a request is not submitted (TTFT clock not started) before its
+    offset, and requests still finish correctly."""
+    cfg = _cfg("bf16")
+    params = _params(cfg)
+    reqs = _requests(cfg, [6, 6], max_new=3, seed=6)
+    reqs[1].arrival_time = 0.25
+    eng = Engine(cfg, params, num_slots=2, max_len=32, chunk_tokens=8)
+    t0 = __import__("time").monotonic()
+    eng.run(reqs, log=None)
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    assert reqs[1].t_submit - (t0 - 0.0) >= 0.0
+    # the late request's submit stamp respects its arrival offset
+    assert reqs[1].t_submit >= reqs[0].t_submit + 0.25

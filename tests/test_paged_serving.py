@@ -317,7 +317,7 @@ def test_finished_slots_leave_decode_batch():
     cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
         quant=BF16_CONFIG, kv_cache_dtype="bf16")
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
-    reqs = _requests(cfg, [8, 8], max_new=2) \
+    reqs = _requests(cfg, [8, 8], max_new=3) \
         + _requests(cfg, [8], max_new=8, rid0=2)
     eng = Engine(cfg, params, num_slots=3, max_len=32)
     eng.submit(reqs)
@@ -327,8 +327,9 @@ def test_finished_slots_leave_decode_batch():
         rows_seen.append(len(eng.kv.rows))
     assert all(r.done for r in reqs)
     # the two short requests retire while the long one keeps decoding:
-    # the decode batch must shrink to a single row, then to zero
-    assert rows_seen[0] == 3 and 1 in rows_seen
+    # the batch fills to three rows (admission is chunk-budgeted, so
+    # not necessarily on the first step), then shrinks to one, to zero
+    assert 3 in rows_seen and 1 in rows_seen
     assert eng.kv.caches is None and eng.kv.rows == []
 
 

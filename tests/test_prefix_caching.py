@@ -8,7 +8,7 @@
   one page's tokens;
 - engine-level physical sharing: two requests with a page-aligned
   common prefix genuinely share pages (asserted on allocator state),
-  the second SKIPS the shared prefill chunks, and a decode append
+  the second chunk-prefills ONLY its unshared suffix, and a write
   into a shared page copies-before-write;
 - the donor is bitwise unperturbed by sharing (vs solo serving), the
   sharer's outputs are deterministic across fresh engines, and the
@@ -170,7 +170,8 @@ def test_allocator_evictable_pages_revive_on_hit():
 def test_engine_prefix_hit_shares_pages_and_skips_prefill():
     """Two requests with a 2-page common prefix: the second maps the
     donor's PHYSICAL pages (same ids, refcount 2 — asserted on
-    allocator state), skips their prefill chunks, and both complete."""
+    allocator state), chunk-prefills only its 5-token suffix, and
+    both complete."""
     cfg = _cfg()
     params = _params(cfg)
     rng = np.random.default_rng(0)
@@ -179,30 +180,32 @@ def test_engine_prefix_hit_shares_pages_and_skips_prefill():
     sharer = Request(rid=1, prompt=np.concatenate(
         [prefix, _prompt(rng, 5)]), max_new=4)
     eng = Engine(cfg, params, num_slots=2, max_len=48)
-    assert eng.float_pages and eng.prefix_cache
+    assert eng.float_pages and eng.prefix_cache and eng.chunked
     eng.submit([donor, sharer])
     eng.step()                          # both admitted in one step
     al = eng.kv.allocator
     bt0, bt1 = al.table(0), al.table(1)
     assert bt1.pages[:2] == bt0.pages[:2] and bt1.shared0 == 2
     assert all(al.refcount(p) == 2 for p in bt0.pages[:2])
-    assert eng.prefill_calls == 1       # the sharer NEVER prefilled
+    assert eng.prefill_calls == 0       # nobody whole-prompt prefilled
+    assert eng.chunk_prefill_steps == 2  # 32-tok donor + 5-tok suffix
     assert eng.prefix_hits == 1 and eng.pages_shared == 2
     assert sharer.prefix_pages == 2
     assert sharer.prefill_skipped == 2 * T
     eng.run(log=None)                   # drain
     assert donor.done and sharer.done
     assert len(donor.out) == 4 and len(sharer.out) == 4
-    # partial hit: the sharer's first write lands in its own fresh
+    # partial hit: the sharer's suffix chunk lands in its own fresh
     # page past the shared prefix — no copy-on-write needed
     assert eng.kv.cow_copies == 0
     assert al.free_pages == al.num_pages and al.cached_pages >= 2
 
 
 def test_engine_full_hit_triggers_exactly_one_cow():
-    """An IDENTICAL prompt is a full page-aligned hit: the replayed
-    last prompt token writes into the shared frontier page, which must
-    copy-before-write (the donor's registered page stays pristine)."""
+    """An IDENTICAL prompt is a full page-aligned hit: its one-token
+    suffix chunk writes into the shared frontier page, which must
+    copy-before-write (the donor's registered page stays pristine —
+    asserted by a THIRD identical request still hitting both pages)."""
     cfg = _cfg()
     params = _params(cfg)
     prompt = _prompt(np.random.default_rng(1), 2 * T)
@@ -210,19 +213,24 @@ def test_engine_full_hit_triggers_exactly_one_cow():
     sharer = Request(rid=1, prompt=prompt.copy(), max_new=4)
     eng = Engine(cfg, params, num_slots=2, max_len=48)
     eng.submit([donor, sharer])
-    # admit WITHOUT decoding: the first decode step copies-on-write,
-    # so physical aliasing is only observable between the two
-    eng._retire_and_refill()
-    eng._admit_new_rows()
+    eng._retire()
+    eng._chunk_phase()                  # stage + attach, no decode yet
     al = eng.kv.allocator
-    shared = al.table(0).pages[:2]
-    assert al.table(1).pages[:2] == shared
-    assert all(al.refcount(p) == 2 for p in shared)
-    eng.run(log=None)
+    assert al.table(1).shared0 == 2     # mapped both donor pages
+    # the suffix chunk already copied the frontier page on write: the
+    # sharer now owns a private copy, the donor's stays registered
     assert eng.kv.cow_copies == 1
-    assert eng.prefill_calls == 1
-    assert sharer.prefill_skipped == 2 * T - 1   # last token replayed
+    assert al.table(1).pages[0] == al.table(0).pages[0]
+    assert al.table(1).pages[1] != al.table(0).pages[1]
+    eng.run(log=None)
+    assert eng.kv.cow_copies == 1       # exactly one, ever
+    assert eng.prefill_calls == 0
+    assert sharer.prefill_skipped == 2 * T - 1   # last token chunked
     assert donor.done and sharer.done and len(sharer.out) == 4
+    third = Request(rid=2, prompt=prompt.copy(), max_new=4)
+    eng.run([third], log=None)
+    assert eng.prefix_hits == 2 and third.prefix_pages == 2
+    assert third.out == sharer.out
 
 
 def test_donor_is_unperturbed_by_sharing():
@@ -246,7 +254,7 @@ def test_donor_is_unperturbed_by_sharing():
 
 
 def test_sharer_outputs_deterministic_across_engines():
-    """The replay-through-decode path is deterministic: a fresh engine
+    """The hit-suffix chunk path is deterministic: a fresh engine
     serving the same shared-prefix trace reproduces every output."""
     cfg = _cfg()
     params = _params(cfg)
@@ -279,7 +287,8 @@ def test_prefix_map_survives_retirement():
     assert al.free_pages == al.num_pages and al.cached_pages == 2
     second = Request(rid=1, prompt=prompt.copy(), max_new=3)
     eng.run([second], log=None)
-    assert eng.prefill_calls == 1       # revival, not re-prefill
+    # revival, not re-prefill: only the final prompt token chunks
+    assert second.prefill_skipped == 2 * T - 1
     assert eng.prefix_hits == 1 and second.prefix_pages == 2
     assert second.done and len(second.out) == 3
 
@@ -296,7 +305,8 @@ def test_full_hit_on_minimal_pool_falls_back_to_cold():
     eng.run([first], log=None)
     second = Request(rid=1, prompt=prompt.copy(), max_new=3)
     eng.run([second], log=None)
-    assert eng.prefill_calls == 2 and eng.prefix_hits == 0
+    assert eng.prefix_hits == 0 and eng.pages_shared == 0
+    assert second.prefill_skipped == 0        # served cold, in full
     assert second.done and second.out == first.out
 
 
@@ -309,7 +319,7 @@ def test_prefix_cache_off_never_shares():
     eng = Engine(cfg, params, num_slots=2, max_len=48,
                  prefix_cache=False)
     eng.run(reqs, log=None)
-    assert eng.prefill_calls == 2 and eng.prefix_hits == 0
+    assert eng.prefix_hits == 0 and eng.pages_shared == 0
     assert reqs[0].out == reqs[1].out   # identical prompts, greedy
 
 
