@@ -381,6 +381,56 @@ def bench_serve_prequant(arch: str = "phi3-mini-3.8b"):
 
 
 # ---------------------------------------------------------------------------
+# Reduction-free decode: delayed (calibrated) activation scales vs the
+# just-in-time path, per recipe — decode-step wall clock plus the
+# structural mechanism: quantization reductions (reduce_max feeding an
+# fp8 cast, core.introspect.count_quant_reductions) removed from the
+# decode jaxpr.  bf16 KV cache so the counts isolate the activation
+# quantizers (the fp8 cache keeps its 2 storage-format reductions —
+# docs/serving.md).
+# ---------------------------------------------------------------------------
+
+
+def bench_decode_reduction_free(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.core.actscale import calibrate_act_scales
+    from repro.core.formats import (MOSS_CONFIG, PER_GROUP_CONFIG,
+                                    PER_TENSOR_CONFIG)
+    from repro.core.introspect import count_quant_reductions
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.train.steps import (make_decode_step, make_prefill_step,
+                                   prequantize_params)
+
+    for mode, quant in (("per_tensor", PER_TENSOR_CONFIG),
+                        ("per_group", PER_GROUP_CONFIG),
+                        ("moss", MOSS_CONFIG)):
+        cfg = get_config(arch, smoke=True).replace(quant=quant,
+                                                   kv_cache_dtype="bf16")
+        params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+        pq = prequantize_params(cfg, params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                  cfg.vocab)
+        tok1 = toks[:, :1]
+        act = calibrate_act_scales(cfg, pq.qweights, pq.scales)
+        pre = jax.jit(make_prefill_step(cfg, 32, scales=pq.scales))
+        _, caches = pre(pq.qweights, {"tokens": toks})
+
+        stats = {}
+        for tag, a in (("jit", None), ("delayed", act)):
+            step = make_decode_step(cfg, scales=pq.scales, act_scales=a)
+            jx = jax.make_jaxpr(step)(pq.qweights, caches, tok1)
+            dec = jax.jit(step)
+            us = _timeit(lambda c: dec(pq.qweights, c, tok1)[0], caches,
+                         iters=10, warmup=2)
+            stats[tag] = (us, count_quant_reductions(jx))
+        us_d, nred_d = stats["delayed"]
+        us_j, nred_j = stats["jit"]
+        row(f"serve_delayed_decode_{mode}", us_d,
+            f"jit_us_{us_j:.1f}_quant_reductions_{nred_d}_vs_{nred_j}")
+
+
+# ---------------------------------------------------------------------------
 # Fused decode attention over the fp8 KV cache: decode step wall clock
 # for the kernel path (CPU default resolves to the ref oracle — same
 # math as the einsum path, so "no slower" holds structurally and in
@@ -727,6 +777,7 @@ def main(argv=None) -> None:
         bench_moe_grouped()
         bench_table2_throughput(B=4, S=64, iters=2)
         bench_serve_prequant()
+        bench_decode_reduction_free()
         bench_decode_attn()
         bench_serve_continuous()
         bench_serve_prefix()
@@ -749,6 +800,7 @@ def main(argv=None) -> None:
     bench_table2_throughput()
     bench_table9_interval()
     bench_serve_prequant()
+    bench_decode_reduction_free()
     bench_decode_attn()
     bench_serve_continuous()
     bench_serve_prefix()

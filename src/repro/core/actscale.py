@@ -1,0 +1,294 @@
+"""Delayed activation scales for serving — the paper's automatic
+scaling carried to decode time (ROADMAP "Automatic scaling
+everywhere").
+
+Training already predicts *weight* scales (``core.autoscale``) so no
+``max|W|`` reduction appears in the steady-state HLO, and serving
+pre-quantizes weights outright (``PrequantParams``).  What remained in
+the decode graph were the per-step **activation** amax reductions:
+every quantized GEMM re-measured ``max|x|`` (per tensor, per COAT
+group, or per MOSS micro-group) on the hot path.  FP8-LM (Peng et al.,
+2023) and Graphcore's scaled-FP8 study (Perez et al., 2023) both show
+delayed / statistics-based activation scaling transfers to inference
+at negligible accuracy cost — a given site's activation distribution
+is stable across decode steps.
+
+This module implements that end to end:
+
+  1. ``calibrate_act_scales`` runs ONE eager (unjitted) forward over a
+     deterministic calibration prompt at ``Engine``/``Server`` build,
+     recording per-site activation amax statistics at the finest
+     granularity the recipe quantizes at (scalar / per-group /
+     per-micro-group);
+  2. each site's statistics — multiplied by a safety ``margin`` —
+     become an ``ActScale``, stored in a flat ``{tag: ActScale}`` dict
+     keyed by the site's params-tree path (e.g. ``"blocks/attn/wq"``)
+     with leading stacked (layer[, expert]) dims, so ``lax.scan`` /
+     ``vmap`` slice them exactly like the weight leaves they ride
+     beside;
+  3. ``repro.train.steps._wrap_serve`` attaches each site's
+     ``ActScale`` as the third ``QT`` field and ``core.linear.qlinear``
+     consumes it through the reduction-free ``_qmm_delayed`` forward —
+     the decode jaxpr then contains **zero** quantization reductions
+     (``core.introspect.count_quant_reductions``; the fp8 KV cache's 2
+     per-layer storage-format reductions remain unless
+     ``REPRO_KV_CACHE=bf16`` — docs/serving.md).
+
+Out-of-range activations saturate (the quantizers' clipping cast),
+bounded by the margin; ``Engine.refresh_act_scales`` re-calibrates
+outside the hot jaxpr.  ``REPRO_SERVE_DELAYED_ACT=0`` is the escape
+hatch back to just-in-time activation scaling, restoring the
+pre-delayed graphs bitwise.
+
+Recording rides the calibration forward through the SAME model code
+serving runs: each quantized ``QT`` carries its site tag string in the
+``a`` field, and ``qlinear`` reports its concrete input amax here
+(``REC``) before taking the normal just-in-time path.  The forward is
+python-unrolled (no scan/vmap tracers): stacked segment params are
+sliced one layer at a time, and the MoE block takes its dense
+every-expert path (what decode uses) with a python loop over experts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import TINY, QuantConfig, e8m0_encode, fp8_max
+
+DEFAULT_MARGIN = 1.25
+CALIBRATION_TOKENS = 32
+_CAL_SEED = 0xAC5
+
+
+class ActScale(NamedTuple):
+    """One serving site's delayed activation scale(s).
+
+    Shapes carry the site's stacked (layer[, expert]) leading dims —
+    scan/vmap slice them alongside the weight — written below for one
+    slice (K = the GEMM inner dim, zero-padded to the group multiple):
+
+      per_tensor   s: () f32 per-tensor scale           sub: None
+      per_group    s: (K/group,) f32 per-group scales   sub: None
+      moss         s: () f32 level-1 scale              sub: (K/micro,)
+                   int8 E8M0 level-2 exponents (2^sub ∈ (0, 1])
+
+    Every group's effective scale upper-bounds its calibration amax by
+    the safety margin (MOSS's E8M0 ratios round UP); in-range decode
+    activations quantize exactly as a just-in-time scale of the same
+    value would, out-of-range ones saturate via the clipping cast."""
+
+    s: jax.Array
+    sub: jax.Array | None = None
+
+
+class _Recorder:
+    """Module-level calibration recorder: ``qlinear`` reports concrete
+    per-site activation amaxes here while a calibration forward runs."""
+
+    def __init__(self):
+        self.recording = False
+        self.index: tuple[int, ...] = ()
+        self.stats: dict[str, dict[tuple[int, ...], np.ndarray]] = {}
+
+    @contextlib.contextmanager
+    def calibrating(self):
+        self.recording, self.index, self.stats = True, (), {}
+        try:
+            yield self
+        finally:
+            self.recording = False
+
+    @contextlib.contextmanager
+    def at_index(self, idx: tuple[int, ...]):
+        prev, self.index = self.index, idx
+        try:
+            yield
+        finally:
+            self.index = prev
+
+    @contextlib.contextmanager
+    def sub_index(self, i: int):
+        with self.at_index(self.index + (int(i),)):
+            yield
+
+    def record(self, tag: str, x, cfg: QuantConfig) -> None:
+        """Accumulate the finest-granularity amax of activation ``x``
+        (the GEMM's left operand, inner dim last) for site ``tag`` at
+        the current (layer[, expert]) index.  Tracers are skipped —
+        only concrete calibration activations count."""
+        if isinstance(x, jax.core.Tracer):
+            return
+        k = x.shape[-1]
+        xf = jnp.abs(jnp.asarray(x, jnp.float32).reshape(-1, k))
+        g = (cfg.group_size if cfg.mode == "per_group"
+             else cfg.micro_group if cfg.mode == "moss" else None)
+        if g is not None:
+            pad = (-k) % g
+            if pad:
+                xf = jnp.pad(xf, ((0, 0), (0, pad)))
+            amax = jnp.max(xf.reshape(xf.shape[0], -1, g), axis=(0, 2))
+        else:
+            amax = jnp.max(xf)
+        amax = np.asarray(jax.device_get(amax))
+        site = self.stats.setdefault(tag, {})
+        prev = site.get(self.index)
+        site[self.index] = (amax if prev is None
+                            else np.maximum(prev, amax))
+
+
+REC = _Recorder()
+
+
+def path_tag(path) -> str:
+    """Canonical site tag for a params-tree path: keys joined by "/" —
+    shared by calibration recording and serve-time wrapping, so the
+    flat ``{tag: ActScale}`` dict lines up by construction (layers and
+    experts are stacked array dims, not tree levels, so the full-tree
+    path IS the site identity)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _stack_site(per_idx: dict[tuple[int, ...], np.ndarray]) -> np.ndarray:
+    """{(layer[, expert]) index: stat array} -> one stacked array whose
+    leading dims mirror the site's stacked weight dims."""
+    idxs = sorted(per_idx)
+    depth = len(idxs[0])
+    if depth == 0:
+        return np.asarray(per_idx[()])
+    dims = tuple(max(i[d] for i in idxs) + 1 for d in range(depth))
+    n = 1
+    for d in dims:
+        n *= d
+    assert len(idxs) == n, \
+        f"sparse calibration grid: {len(idxs)} records for dims {dims}"
+    flat = np.stack([np.asarray(per_idx[i]) for i in idxs])
+    return flat.reshape(*dims, *flat.shape[1:])
+
+
+def _to_scales(amax: np.ndarray, cfg: QuantConfig,
+               margin: float) -> ActScale:
+    """Calibrated amax statistics -> the recipe's ActScale."""
+    fmax = float(fp8_max(cfg.fwd_format))
+    s_fine = (np.maximum(amax, TINY) / fmax).astype(np.float32)
+    if cfg.mode in ("per_tensor", "per_group"):
+        return ActScale(s=jnp.asarray(margin * s_fine, jnp.float32))
+    assert cfg.mode == "moss", cfg.mode
+    # level-1 = margin · max_g s_g; level-2 E8M0 = ceil-encoded ratio.
+    # Rounding UP means every group's effective scale ≥ margin · s_g —
+    # never an underestimate; the clipping cast backstops any
+    # post-calibration drift beyond the margin.
+    s1 = margin * np.maximum(s_fine.max(axis=-1), TINY)
+    ratio = (margin * s_fine) / s1[..., None]
+    sexp = np.asarray(jax.device_get(
+        e8m0_encode(jnp.asarray(ratio, jnp.float32))))
+    return ActScale(s=jnp.asarray(s1, jnp.float32),
+                    sub=jnp.asarray(sexp, jnp.int8))
+
+
+# ---------------------------------------------------------------------------
+# Calibration forward (eager, python-unrolled)
+# ---------------------------------------------------------------------------
+
+
+def calibration_tokens(cfg, n: int = CALIBRATION_TOKENS) -> np.ndarray:
+    """Deterministic calibration prompt: fixed seed, fixed length,
+    independent of engine geometry (num_slots / max_len) — every
+    Engine/Server over the same weights calibrates to the same scales,
+    so engine-vs-engine parity tests stay exact."""
+    rng = np.random.default_rng(_CAL_SEED)
+    if cfg.input_mode == "embeddings":
+        return rng.standard_normal((1, n, cfg.d_model)).astype(np.float32)
+    return rng.integers(0, cfg.vocab, size=(1, n)).astype(np.int32)
+
+
+def _tag_wrap(params, scales, mask):
+    """QT-wrap quantized leaves with their site tag riding in ``a``."""
+    from .linear import QT
+
+    tmw = jax.tree_util.tree_map_with_path
+    if scales is None:
+        return tmw(lambda p, w, m: QT(w, None, path_tag(p)) if m else w,
+                   params, mask)
+    return tmw(lambda p, w, s, m: QT(w, s, path_tag(p)) if m else w,
+               params, scales, mask)
+
+
+def _slice_stacked(tree, l: int):
+    """Index layer ``l`` out of a stacked segment subtree, preserving
+    QT tag strings (jax.tree.map would descend into them)."""
+    from .linear import QT
+
+    if isinstance(tree, QT):
+        return QT(tree.w[l], None if tree.s is None else tree.s[l],
+                  tree.a)
+    if isinstance(tree, dict):
+        return {k: _slice_stacked(v, l) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_slice_stacked(v, l) for v in tree)
+    if hasattr(tree, "ndim"):
+        return tree[l]
+    return tree
+
+
+def calibrate_act_scales(cfg, params, scales=None, *, tokens=None,
+                         margin: float = DEFAULT_MARGIN) -> dict | None:
+    """One eager forward over the calibration prompt -> flat
+    ``{site tag: ActScale}`` dict (None for unquantized recipes).
+
+    ``params``/``scales`` are the serving trees ``prepare_weights``
+    built — fp8 weight payloads pass through ``qlinear`` exactly as in
+    the jitted steps, so calibration sees the numerics decode will run.
+    The forward mirrors ``transformer.forward``'s train path (identical
+    quantized GEMM sites, no cache) but python-unrolls the layer scans:
+    every recorded amax is a concrete value, indexed per layer (and per
+    expert inside the MoE dense path)."""
+    qcfg = cfg.quant
+    if not qcfg.quantized:
+        return None
+    from repro.models.layers import apply_norm, embed_tokens, lm_head
+    from repro.models.transformer import build_segments
+    from repro.train.steps import serve_quant_mask
+
+    wrapped = _tag_wrap(params, scales, serve_quant_mask(cfg, params))
+    if tokens is None:
+        tokens = calibration_tokens(cfg)
+    with REC.calibrating():
+        if cfg.input_mode == "embeddings":
+            x = jnp.asarray(tokens, jnp.bfloat16)
+        else:
+            x = embed_tokens(cfg, wrapped["embed"],
+                             jnp.asarray(tokens, jnp.int32))
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if cfg.pos_embedding == "sinusoidal":
+            from repro.models.layers import sinusoidal_embedding
+
+            pe = sinusoidal_embedding(positions, cfg.d_model)
+            x = x + pe[None].astype(x.dtype)
+        for seg in build_segments(cfg):
+            p_seg = wrapped[seg.name]
+            for l in range(seg.n):
+                with REC.at_index((l,)):
+                    x, _, _ = seg.apply(cfg, qcfg,
+                                        _slice_stacked(p_seg, l), x,
+                                        positions, None, "train")
+        x = apply_norm(cfg, wrapped["final_norm"], x)
+        lm_head(cfg, wrapped["embed"], x, qcfg)
+        stats = REC.stats
+    return {tag: _to_scales(_stack_site(per_idx), qcfg, margin)
+            for tag, per_idx in stats.items()}

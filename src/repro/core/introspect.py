@@ -128,6 +128,117 @@ def count_fp8_dequant_upcasts(jaxpr, sizes: set[int]) -> int:
     return n
 
 
+# Primitives a quantizer's *scale arithmetic* may route through between
+# an amax reduction and the final fp8 cast: abs/max chains, the
+# FP8_MAX / TINY normalization, E8M0 encode (log2/ceil/clip) and decode
+# (bit shifts + bitcast), the zero-denominator guard (comparisons +
+# select_n), and shape plumbing.  Deliberately EXCLUDES ``exp`` and
+# ``dot_general`` so a softmax's max-subtraction chain (max → sub → exp)
+# dies at the exp and never reaches a downstream quantize through the
+# attention output (tests/test_introspect.py's negative controls).
+_SCALE_CHAIN_PRIMS = frozenset({
+    "abs", "max", "min", "div", "mul", "sub", "add", "neg", "sign",
+    "reduce_max", "reduce_min", "reshape", "broadcast_in_dim", "squeeze",
+    "convert_element_type", "clamp", "select_n", "gt", "lt", "ge", "le",
+    "eq", "ne", "log", "log2", "ceil", "floor", "round", "exp2",
+    "integer_pow", "pow", "rsqrt", "sqrt", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic", "or", "and", "xor",
+    "bitcast_convert_type", "transpose", "slice", "dynamic_slice",
+    "stop_gradient", "concatenate", "copy", "is_finite",
+})
+
+
+def count_quant_reductions(jaxpr) -> int:
+    """max/abs-reduction equations whose result *feeds a quantize* — a
+    ``convert_element_type`` to an fp8 dtype — through scale arithmetic
+    only.
+
+    This is the structural definition of "the graph computes a
+    quantization scale at runtime": every just-in-time quantizer
+    (per-tensor, per-group, MOSS two-level, KV-cache write) starts with
+    a ``reduce_max`` over ``|x|`` and ends in an fp8 cast, with nothing
+    between them but scale arithmetic (``_SCALE_CHAIN_PRIMS``).  The
+    delayed/predicted-scale serving path (docs/serving.md) consumes
+    cached scales instead, so its decode jaxpr counts **zero** — while
+    a softmax's max (max → sub → **exp**) or a masking max is never
+    miscounted: the allowlisted chain stops at the first non-scale
+    primitive.
+
+    Reachability FOLLOWS CALL BOUNDARIES: the fp8 cast often sits in a
+    ``pjit`` sub-jaxpr of the scan/custom_vjp body holding the
+    reduction, so taint maps positionally through call-like eqns
+    (eqn invar i ↔ body invar i, eqn outvar j ↔ body outvar j — exact
+    for pjit / scan / custom_vjp / remat; ``cond`` shifts by the
+    predicate).  Counts are structural — a reduction inside a scan
+    body counts once, not once per trip."""
+    total = 0
+    seen: set[int] = set()
+
+    def walk(jx):
+        nonlocal total
+        if isinstance(jx, ClosedJaxpr):
+            jx = jx.jaxpr
+        if id(jx) in seen:
+            return
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            if (eqn.primitive.name == "reduce_max"
+                    and _taint_flow(jx, {id(v) for v in eqn.outvars})[0]):
+                total += 1
+            for val in eqn.params.values():
+                for sub in _sub_jaxprs(val):
+                    walk(sub)
+
+    walk(jaxpr)
+    return total
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and not hasattr(v, "val")  # not a Literal
+
+
+def _taint_flow(jx, start_ids=frozenset(), in_positions=()):
+    """Propagate taint forward through ONE jaxpr (eqns are in
+    topological order) and into call-like sub-jaxprs by positional
+    invar/outvar mapping.  Returns ``(reached_fp8_cast,
+    tainted_outvar_positions)``."""
+    if isinstance(jx, ClosedJaxpr):
+        jx = jx.jaxpr
+    tainted = set(start_ids)
+    for i in in_positions:
+        if i < len(jx.invars):
+            tainted.add(id(jx.invars[i]))
+    found = False
+    for eqn in jx.eqns:
+        tin = [i for i, v in enumerate(eqn.invars)
+               if _is_var(v) and id(v) in tainted]
+        if not tin:
+            continue
+        name = eqn.primitive.name
+        subs = [s for val in eqn.params.values() for s in _sub_jaxprs(val)]
+        if subs:
+            off = 1 if name == "cond" else 0
+            pos = [i - off for i in tin if i >= off]
+            for sub in subs:
+                f, tout = _taint_flow(sub, in_positions=pos)
+                found = found or f
+                for o in tout:
+                    if o < len(eqn.outvars):
+                        tainted.add(id(eqn.outvars[o]))
+            continue
+        if (name == "convert_element_type"
+                and eqn.params.get("new_dtype") in _FP8_DTYPES):
+            found = True
+            continue
+        if name in _SCALE_CHAIN_PRIMS:
+            for v in eqn.outvars:
+                tainted.add(id(v))
+        # else: chain dies at a non-scale primitive
+    tout = {i for i, v in enumerate(jx.outvars)
+            if _is_var(v) and id(v) in tainted}
+    return found, tout
+
+
 def count_dot_general_over(jaxpr, sizes: set[int]) -> int:
     """dot_general equations with an operand whose element count is in
     ``sizes`` — with the KV-cache slice sizes this counts the einsum

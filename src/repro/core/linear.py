@@ -29,14 +29,16 @@ the kernel — kernels/mx_bwd.py).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from .actscale import ActScale, REC
 from .formats import QuantConfig
 from .quant import (
     PerTensorQ,
+    quant_mx_delayed,
     quant_per_group,
     quant_per_tensor,
 )
@@ -52,10 +54,22 @@ class QT(NamedTuple):
     from ``repro.core.quant.PrequantParams``) with ``s`` its build-time
     dequant scale — ``_quantize_w`` detects the dtype and skips the
     in-graph quantize + max-reduction entirely (docs/serving.md).
+
+    ``a`` carries this GEMM site's *activation*-scale state on the
+    delayed-activation serving path (``repro.core.actscale``):
+
+      None               — default: activations quantize just-in-time
+                           (in-graph amax), the training semantics
+      ActScale           — calibrated delayed scales: ``qlinear`` takes
+                           the reduction-free ``_qmm_delayed`` forward
+      str (site tag)     — calibration only: ``qlinear`` records the
+                           activation's amax under this tag and then
+                           runs the normal just-in-time path
     """
 
     w: jax.Array
     s: jax.Array | None = None
+    a: Any = None
 
 
 def _is_fp8(w: jax.Array) -> bool:
@@ -335,9 +349,20 @@ qmm_grouped.defvjp(_qmm_grouped_fwd, _qmm_grouped_bwd)
 
 def qlinear(x: jax.Array, wt: QT, cfg: QuantConfig) -> jax.Array:
     """Quantized ``x @ w``.  ``wt`` bundles the weight and its predicted
-    scale; falls back to in-step (jit) scaling when the scale is None."""
+    scale; falls back to in-step (jit) scaling when the scale is None.
+    A calibrated ``wt.a`` (ActScale) takes the reduction-free delayed-
+    activation forward instead (docs/serving.md)."""
     if cfg.mode == "bf16":
         return qmm(cfg, x, wt.w, jnp.zeros((), jnp.float32))
+    a = wt.a
+    if isinstance(a, str):
+        # calibration pass: report this site's activation amax, then
+        # run the normal just-in-time forward (what we're calibrating)
+        if REC.recording:
+            REC.record(a, x, cfg)
+        a = None
+    if isinstance(a, ActScale):
+        return _qmm_delayed(cfg, x, wt, a)
     s = wt.s
     if s is None:
         # no predicted scale available → behave like jit scaling
@@ -345,6 +370,51 @@ def qlinear(x: jax.Array, wt: QT, cfg: QuantConfig) -> jax.Array:
             if cfg.weight_scaling == "auto" else cfg
         s = jnp.ones((), jnp.float32)
     return qmm(cfg, x, wt.w, s)
+
+
+def _qmm_delayed(cfg: QuantConfig, x: jax.Array, wt: QT,
+                 a: ActScale) -> jax.Array:
+    """Serving-only (forward, no VJP) quantized GEMM that consumes the
+    site's calibrated activation scales instead of measuring them: the
+    quantize is a rescale + saturating cast, with **zero** reductions in
+    the graph (``core.introspect.count_quant_reductions``).  Weights
+    ride the same pre-quantized fast path as the just-in-time forward
+    (``_quantize_w``); the GEMM itself goes through the identical
+    kernel-dispatch entry points, so a calibrated scale equal to the
+    just-in-time one reproduces its output bitwise."""
+    from repro.kernels import dispatch
+
+    orig_dtype = x.dtype
+    *lead, k = x.shape
+    x2d = x.reshape(-1, k)
+    if wt.s is None and not _is_fp8(wt.w):
+        # hatch combo (REPRO_SERVE_PREQUANT=0, non-auto recipe): weight
+        # still quantizes in-graph, only the activation side is delayed
+        wcfg = QuantConfig(**{**cfg.__dict__, "weight_scaling": "jit"}) \
+            if cfg.weight_scaling == "auto" else cfg
+        wq = _quantize_w(wcfg, wt.w, jnp.ones((), jnp.float32))
+    else:
+        wq = _quantize_w(cfg, wt.w, wt.s if wt.s is not None
+                         else jnp.ones((), jnp.float32))
+
+    if cfg.mode == "moss":
+        x2d = _pad_axis(x2d, -1, cfg.micro_group)
+        xq = quant_mx_delayed(x2d, a.s, a.sub, cfg.micro_group,
+                              cfg.fwd_format)
+        wq_p = PerTensorQ(q=_pad_axis(wq.q, 0, cfg.micro_group), s=wq.s)
+        y2d = dispatch.mx_matmul(xq, wq_p, out_dtype=jnp.float32)
+    elif cfg.mode == "per_group":
+        x2d = _pad_axis(x2d, -1, cfg.group_size)
+        g = x2d.shape[-1] // cfg.group_size
+        s = jnp.broadcast_to(a.s.astype(jnp.float32),
+                             (x2d.shape[0], g))
+        xq = quant_per_group(x2d, cfg.group_size, cfg.fwd_format, scale=s)
+        wq_p = PerTensorQ(q=_pad_axis(wq.q, 0, cfg.group_size), s=wq.s)
+        y2d = dispatch.group_matmul(xq, wq_p, out_dtype=jnp.float32)
+    else:  # per_tensor
+        xq = quant_per_tensor(x2d, cfg.fwd_format, scale=a.s)
+        y2d = dispatch.pt_matmul(xq, wq, out_dtype=jnp.float32)
+    return y2d.reshape(*lead, wt.w.shape[-1]).astype(orig_dtype)
 
 
 def qlinear_grouped(x_flat: jax.Array, wt: QT, group_sizes: jax.Array,
@@ -374,7 +444,7 @@ def dense_general(x: jax.Array, wt: QT, cfg: QuantConfig,
     if w.ndim > 2:
         k = w.shape[0]
         wf = w.reshape(k, -1)
-        y = qlinear(x, QT(wf, wt.s), cfg)
+        y = qlinear(x, QT(wf, wt.s, wt.a), cfg)
         return y.reshape(*x.shape[:-1], *w.shape[1:])
     y = qlinear(x, wt, cfg)
     if out_features_shape:

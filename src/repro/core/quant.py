@@ -152,13 +152,20 @@ def quant_per_tensor(x: jax.Array, fmt: FP8Format = "e4m3",
 
 
 def quant_per_group(x: jax.Array, group: int = 128,
-                    fmt: FP8Format = "e4m3") -> PerGroupQ:
-    """COAT-style per-group scales along the last axis."""
+                    fmt: FP8Format = "e4m3",
+                    scale: jax.Array | None = None) -> PerGroupQ:
+    """COAT-style per-group scales along the last axis.  ``scale``
+    (shape ``(..., K // group)``) may be supplied externally (the
+    delayed-activation serving path) to skip the amax reduction; values
+    beyond ``scale · FP8_MAX`` saturate via the clipping cast."""
     *lead, k = x.shape
     assert k % group == 0, f"K={k} not divisible by group={group}"
     xg = x.astype(jnp.float32).reshape(*lead, k // group, group)
-    amax = jnp.max(jnp.abs(xg), axis=-1)
-    s = jnp.maximum(amax, TINY) / fp8_max(fmt)
+    if scale is None:
+        amax = jnp.max(jnp.abs(xg), axis=-1)
+        s = jnp.maximum(amax, TINY) / fp8_max(fmt)
+    else:
+        s = jnp.asarray(scale, jnp.float32)
     q = cast_fp8(xg / s[..., None], fmt).reshape(x.shape)
     return PerGroupQ(q=q, s=s)
 
@@ -188,6 +195,35 @@ def quant_mx(x: jax.Array, micro_group: int = 32, fmt: FP8Format = "e4m3",
     # gradients: s ~ 1e-20, ss = 2^-127).  A zero denominator means the
     # group's values are below f32 resolution relative to the tensor —
     # quantize them to 0 (dequant multiplies by the same 0: consistent).
+    denom = (ss * s)[..., None]
+    q = cast_fp8(jnp.where(denom > 0, xg / jnp.where(denom > 0, denom, 1.0),
+                           0.0), fmt).reshape(x.shape)
+    return MxQ(q=q, sexp=sexp, s=s)
+
+
+def quant_mx_delayed(x: jax.Array, global_scale: jax.Array,
+                     sexp: jax.Array, micro_group: int = 32,
+                     fmt: FP8Format = "e4m3") -> MxQ:
+    """MOSS two-level quantization against *pre-computed* scales — the
+    reduction-free counterpart of ``quant_mx`` for the delayed-
+    activation serving path (``core.actscale``): both the level-1 scale
+    and the per-micro-group E8M0 exponents come from calibration, so
+    the graph contains no amax reduction at all — just the rescale and
+    the saturating fp8 cast (values past the calibrated range clip).
+
+    ``global_scale`` is a scalar; ``sexp`` is int8 E8M0 of shape
+    ``(K // micro_group,)`` (or already broadcast to ``(..., K//µg)``)
+    and is broadcast to the per-row grid the MX GEMM consumes."""
+    *lead, k = x.shape
+    assert k % micro_group == 0, f"K={k} not divisible by {micro_group}"
+    xg = x.astype(jnp.float32).reshape(*lead, k // micro_group,
+                                       micro_group)
+    s = jnp.maximum(jnp.asarray(global_scale, jnp.float32), TINY)
+    sexp = jnp.broadcast_to(jnp.asarray(sexp, jnp.int8),
+                            (*lead, k // micro_group))
+    ss = e8m0_decode(sexp)
+    # same zero-denominator guard as quant_mx: a group whose effective
+    # scale underflows f32 quantizes to 0 (dequant is consistent)
     denom = (ss * s)[..., None]
     q = cast_fp8(jnp.where(denom > 0, xg / jnp.where(denom > 0, denom, 1.0),
                            0.0), fmt).reshape(x.shape)

@@ -78,6 +78,20 @@ def serve_prequant() -> bool:
     return os.environ.get("REPRO_SERVE_PREQUANT", "1").strip() != "0"
 
 
+# Delayed activation scales for serving (see repro.core.actscale and
+# docs/serving.md): Engine/Server calibrate per-site activation scales
+# with one eager forward at build and the decode/prefill graphs consume
+# them instead of measuring per-step amaxes — zero quantization
+# reductions in the decode jaxpr (core.introspect.
+# count_quant_reductions).  REPRO_SERVE_DELAYED_ACT=0 is the escape
+# hatch back to just-in-time activation scaling (bitwise the
+# pre-delayed graphs).
+def serve_delayed_act() -> bool:
+    """Whether serving consumes calibrated (delayed) activation scales
+    instead of in-graph per-step amax reductions."""
+    return os.environ.get("REPRO_SERVE_DELAYED_ACT", "1").strip() != "0"
+
+
 # Paged continuous-batching serving (see repro.serving and
 # launch/serve.py): the paged engine (per-slot lengths, block-table
 # page accounting, scheduler with TTFT/TPOT metrics, retirement of

@@ -30,6 +30,7 @@ from repro.core.runtime_flags import serve_paged
 from repro.models.layers import init_tree
 from repro.models.transformer import init_caches, model_defs
 from repro.serving import Engine, Request, greedy_sample, prepare_weights
+from repro.serving.engine import calibrate_serving
 from repro.serving.paged_cache import write_row
 from repro.serving.scheduler import RequestState, hit_stop
 from repro.train.steps import make_decode_step, make_prefill_step
@@ -58,14 +59,36 @@ class Server:
         self.max_len = max_len
         self.params, self.scales, self.prequant = \
             prepare_weights(cfg, params)
-        self.prefill = jax.jit(make_prefill_step(cfg, max_len,
-                                                 scales=self.scales))
-        self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
-                              donate_argnums=(1,))
+        self.act_scales = calibrate_serving(cfg, self.params,
+                                            self.scales)
+        self._build_steps()
         # slot-shaped caches at build: B rows, per-slot idx vector
         self.caches = init_caches(cfg, batch_slots, max_len,
                                   per_slot=True)
         self.slots: list[Request | None] = [None] * batch_slots
+
+    def _build_steps(self):
+        self.prefill = jax.jit(
+            make_prefill_step(self.cfg, self.max_len,
+                              scales=self.scales,
+                              act_scales=self.act_scales))
+        self.decode = jax.jit(
+            make_decode_step(self.cfg, scales=self.scales,
+                             act_scales=self.act_scales),
+            donate_argnums=(1,))
+
+    def refresh_act_scales(self, tokens=None, margin=None):
+        """Re-calibrate delayed activation scales and rebuild the
+        jitted steps (see ``Engine.refresh_act_scales``)."""
+        if self.act_scales is None:
+            return None
+        from repro.core.actscale import calibrate_act_scales
+
+        kw = {} if margin is None else {"margin": margin}
+        self.act_scales = calibrate_act_scales(
+            self.cfg, self.params, self.scales, tokens=tokens, **kw)
+        self._build_steps()
+        return self.act_scales
 
     def _prefill_request(self, req: Request, slot: int):
         req.state = RequestState.RUNNING

@@ -488,8 +488,9 @@ def attention(cfg, p, x, positions, qcfg: QuantConfig,
 
 
 def QTflat(wt):
-    """wo is stored (H, Dh, d); flatten to (H·Dh, d) for the GEMM."""
+    """wo is stored (H, Dh, d); flatten to (H·Dh, d) for the GEMM.
+    Preserves the activation-scale field (delayed-scale serving)."""
     from repro.core.linear import QT
     w = wt.w if hasattr(wt, "w") else wt
     s = wt.s if hasattr(wt, "s") else None
-    return QT(w.reshape(-1, w.shape[-1]), s)
+    return QT(w.reshape(-1, w.shape[-1]), s, getattr(wt, "a", None))

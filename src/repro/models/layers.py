@@ -224,9 +224,15 @@ def embed_tokens(cfg, p, tokens):
 
 def lm_head(cfg, p, x, qcfg: QuantConfig):
     if cfg.tie_embeddings:
-        emb = p["embedding"]
-        w = (emb.w if isinstance(emb, QT) else emb).T
-        logits = qlinear(x, QT(w, None), qcfg)
+        if "head_t" in p:
+            # prequantized transposed head (serving): the fp8 payload
+            # was cast at build time, so no vocab-sized quantize (or
+            # its amax reduction) appears in the decode graph
+            logits = qlinear(x, p["head_t"], qcfg)
+        else:
+            emb = p["embedding"]
+            w = (emb.w if isinstance(emb, QT) else emb).T
+            logits = qlinear(x, QT(w, None), qcfg)
     else:
         logits = qlinear(x, p["head"], qcfg)
     if cfg.logit_softcap > 0:

@@ -67,8 +67,25 @@ def _expert_ffn(cfg, w_up: QT, w_gate: QT, w_down: QT, x, qcfg):
 
 def _experts_vmapped(cfg, p, xs, qcfg):
     """xs: (E_local, C, d) -> (E_local, C, d); per-expert quant scales."""
+    from repro.core.actscale import REC
+
     def one(w_up, w_gate, w_down, x):
         return _expert_ffn(cfg, w_up, w_gate, w_down, x, qcfg)
+
+    if REC.recording:
+        # calibration: python-loop the experts so each records its own
+        # concrete activation amax under its (layer, expert) index.
+        # QT fields are sliced by hand — the tag string in ``a`` is not
+        # indexable, and vmap can't batch over a str leaf.
+        def sl(wt, i):
+            return QT(wt.w[i], None if wt.s is None else wt.s[i], wt.a)
+
+        ys = []
+        for i in range(xs.shape[0]):
+            with REC.sub_index(i):
+                ys.append(one(sl(p["w_up"], i), sl(p["w_gate"], i),
+                              sl(p["w_down"], i), xs[i]))
+        return jnp.stack(ys)
     return jax.vmap(one)(p["w_up"], p["w_gate"], p["w_down"], xs)
 
 
@@ -183,11 +200,17 @@ def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
     top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
     aux = load_balance_loss(probs, top_ids, cfg.n_experts, cfg.top_k)
 
+    from repro.core.actscale import REC
+
     mesh = _active_mesh()
     use_ep = (mesh is not None and mode != "decode"
               and "model" in mesh.axis_names)
-    if mode == "decode" or (not use_ep and cfg.moe_decode_dense
-                            and t <= 4096):
+    # calibration (REC.recording) forces the dense every-expert path:
+    # it is what decode runs, and sort-based dispatch would hand some
+    # experts empty/truncated buffers — near-zero amaxes that would
+    # catastrophically clip those experts at decode time
+    if mode == "decode" or REC.recording or (
+            not use_ep and cfg.moe_decode_dense and t <= 4096):
         y = _dense_moe(cfg, p, x_flat, probs, top_w, top_ids, qcfg)
         return y.reshape(b, s, d), aux
 

@@ -65,9 +65,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.actscale import calibrate_act_scales
 from repro.core.runtime_flags import (
     chunked_prefill,
     paged_placement,
+    serve_delayed_act,
     serve_preemption,
     serve_prefix_cache,
     serve_prequant,
@@ -109,6 +111,17 @@ def prepare_weights(cfg, params):
     if prequant is not None:
         return prequant.qweights, prequant.scales, prequant
     return params, serve_weight_scales(cfg, params), None
+
+
+def calibrate_serving(cfg, params, scales):
+    """Build-time delayed-activation-scale calibration shared by the
+    engine and the legacy Server: one eager forward over the
+    calibration prompt (``repro.core.actscale``) when
+    ``REPRO_SERVE_DELAYED_ACT`` is on, else None (just-in-time
+    activation scaling, the pre-delayed graphs bitwise)."""
+    if not serve_delayed_act():
+        return None
+    return calibrate_act_scales(cfg, params, scales)
 
 
 def greedy_sample(logits):
@@ -174,10 +187,9 @@ class Engine:
         self.eos_id = eos_id
         self.params, self.scales, self.prequant = \
             prepare_weights(cfg, params)
-        self.prefill = jax.jit(make_prefill_step(cfg, max_len,
-                                                 scales=self.scales))
-        self.decode = jax.jit(make_decode_step(cfg, scales=self.scales),
-                              donate_argnums=(1,))
+        self.act_scales = calibrate_serving(cfg, self.params,
+                                            self.scales)
+        self._build_steps()
         self.float_pages = (paged_placement() == "float"
                             and paged_decode_supported(cfg, max_len,
                                                        page_size))
@@ -216,6 +228,29 @@ class Engine:
         self.swap_ins = 0
         self.sched = Scheduler(slo=slo)
         self.requests: dict[int, Request] = {}
+
+    def _build_steps(self):
+        self.prefill = jax.jit(
+            make_prefill_step(self.cfg, self.max_len,
+                              scales=self.scales,
+                              act_scales=self.act_scales))
+        self.decode = jax.jit(
+            make_decode_step(self.cfg, scales=self.scales,
+                             act_scales=self.act_scales),
+            donate_argnums=(1,))
+
+    def refresh_act_scales(self, tokens=None, margin=None):
+        """Re-calibrate the delayed activation scales (optionally on
+        caller-supplied ``tokens``) and rebuild the jitted steps —
+        runs entirely OUTSIDE the hot decode jaxpr.  No-op when
+        delayed scaling is off."""
+        if self.act_scales is None:
+            return None
+        kw = {} if margin is None else {"margin": margin}
+        self.act_scales = calibrate_act_scales(
+            self.cfg, self.params, self.scales, tokens=tokens, **kw)
+        self._build_steps()
+        return self.act_scales
 
     # -- admission -----------------------------------------------------
     def _total_tokens(self, req: Request) -> int:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import QuantConfig, fp8_max, TINY
+from repro.core.linear import QT
 from repro.distributed import compression
 from repro.models.layers import quant_mask_tree, wrap_qt, wrap_qt_nojit
 from repro.models.transformer import ce_loss, forward, init_caches, model_defs
@@ -269,9 +270,18 @@ def prequantize_params(cfg, params):
     identical to the in-graph path (tests/test_serving.py).
 
     Returns a ``PrequantParams`` (qweights, scales), or None in bf16
-    mode.  Never-quantized leaves (norms, routers, embeddings — and
-    the tied-embedding LM head, which shares the unquantized embedding
-    table) keep their raw arrays and in-graph behavior.
+    mode.  Never-quantized leaves (norms, routers, embeddings) keep
+    their raw arrays and in-graph behavior.
+
+    Tied-embedding models additionally get a build-time fp8
+    **transposed head** (``embed/head_t``, COAT-style dual layout): the
+    historical tied path re-quantized the vocab-sized ``embeddingᵀ``
+    inside EVERY decode step — the one remaining vocab-sized fp8 cast
+    in the decode graph.  The payload is quantized with the same
+    in-graph (amax) scale the tied path computed — amax is
+    transpose-invariant — so serving logits stay bitwise identical
+    while the cast and its reduction leave the graph
+    (tests/test_serving.py tied-head parity).
     """
     from repro.core.quant import PrequantParams, prequant_weight
 
@@ -298,21 +308,58 @@ def prequantize_params(cfg, params):
     out = jax.tree.map(leaf, params, sdims, mask,
                        pred if auto else sdims)
     is_pair = lambda o: isinstance(o, tuple) and len(o) == 2
-    return PrequantParams(
-        qweights=jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
-        scales=jax.tree.map(lambda o: o[1], out, is_leaf=is_pair))
+    qweights = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    scales = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    if cfg.tie_embeddings:
+        # scale=None ALWAYS (even for auto recipes): the in-graph tied
+        # path is QT(embᵀ, None) → jit weight scaling, and amax is
+        # transpose-invariant, so this reproduces it bitwise
+        q, s = prequant_weight(
+            jnp.asarray(params["embed"]["embedding"]).T, 0,
+            qcfg.fwd_format, scale=None,
+            cast_bf16=qcfg.weight_cast_bf16)
+        qweights["embed"]["head_t"] = q
+        scales["embed"]["head_t"] = s
+    return PrequantParams(qweights=qweights, scales=scales)
 
 
-def _wrap_serve(params, mask, scales):
+def serve_quant_mask(cfg, tree=None):
+    """The serving quantization mask: ``quant_mask_tree`` patched with
+    the prequant transposed tied head (``embed/head_t``) when ``tree``
+    (a serving params or scales tree) carries one — the head is not a
+    PDef, it exists only in prequantized serving trees."""
+    mask = quant_mask_tree(model_defs(cfg))
+    if (isinstance(tree, dict) and isinstance(tree.get("embed"), dict)
+            and "head_t" in tree["embed"]):
+        mask = {**mask, "embed": {**mask["embed"], "head_t": True}}
+    return mask
+
+
+def _wrap_serve(params, mask, scales, act=None):
     """QT-wrap with cached build-time scales when available.  ``params``
     may be the raw tree or ``PrequantParams.qweights`` (fp8 payloads) —
-    the linear layer keys off the leaf dtype."""
+    the linear layer keys off the leaf dtype.
+
+    ``act`` is the flat ``{site tag: ActScale}`` dict from
+    ``repro.core.actscale.calibrate_act_scales``: each quantized leaf
+    additionally gets its site's calibrated activation scales in the
+    third QT field, flipping ``qlinear`` onto the reduction-free
+    delayed forward (docs/serving.md)."""
+    if act:
+        from repro.core.actscale import path_tag
+
+        tmw = jax.tree_util.tree_map_with_path
+        if scales is None:
+            return tmw(lambda p, w, m: QT(w, None, act.get(path_tag(p)))
+                       if m else w, params, mask)
+        return tmw(lambda p, w, s, m: QT(w, s, act.get(path_tag(p)))
+                   if m else w, params, scales, mask)
     if scales is None:
         return wrap_qt_nojit(params, mask)
     return wrap_qt(params, scales, mask)
 
 
-def make_prefill_step(cfg, max_len: int, scales=None):
+def make_prefill_step(cfg, max_len: int, scales=None, act_scales=None):
     """``scales`` (from ``serve_weight_scales``) threads pre-computed
     per-tensor weight scales through; None falls back to in-step (jit)
     scaling — the training-eval behavior.
@@ -323,13 +370,16 @@ def make_prefill_step(cfg, max_len: int, scales=None):
     compiles once per bucket instead of once per prompt length; the
     causally-correct last-token logits then sit at the true prompt
     length - 1, not at -1 (docs/continuous-batching.md).  ``None``
-    (the default) keeps the historical behavior: logits[:, -1:]."""
-    defs = model_defs(cfg)
-    mask = quant_mask_tree(defs)
+    (the default) keeps the historical behavior: logits[:, -1:].
+
+    ``act_scales`` (from ``repro.core.actscale.calibrate_act_scales``)
+    swaps in-graph activation amax reductions for the calibrated
+    delayed scales; None keeps just-in-time scaling."""
+    mask = serve_quant_mask(cfg, scales)
     qcfg = cfg.quant
 
     def prefill_step(params, batch, last=None):
-        qp = _wrap_serve(params, mask, scales)
+        qp = _wrap_serve(params, mask, scales, act_scales)
         b = (batch["tokens"].shape[0] if "tokens" in batch
              else batch["embeds"].shape[0])
         caches = init_caches(cfg, b, max_len)
@@ -343,7 +393,7 @@ def make_prefill_step(cfg, max_len: int, scales=None):
     return prefill_step
 
 
-def make_chunk_prefill_step(cfg, scales=None):
+def make_chunk_prefill_step(cfg, scales=None, act_scales=None):
     """Chunked-prefill step — a documented alias of
     ``make_decode_step``.
 
@@ -356,17 +406,16 @@ def make_chunk_prefill_step(cfg, scales=None):
     the already-resident pages via the block table plus an in-chunk
     causal mask.  ONE chunk shape replaces v1's per-16-token-bucket
     prefill compiles (docs/continuous-batching.md)."""
-    return make_decode_step(cfg, scales=scales)
+    return make_decode_step(cfg, scales=scales, act_scales=act_scales)
 
 
-def make_decode_step(cfg, scales=None):
-    defs = model_defs(cfg)
-    mask = quant_mask_tree(defs)
+def make_decode_step(cfg, scales=None, act_scales=None):
+    mask = serve_quant_mask(cfg, scales)
     qcfg = cfg.quant
 
     def decode_step(params, caches, tokens):
         """tokens: (B, 1) int32 (or embeds (B,1,d)) -> next logits."""
-        qp = _wrap_serve(params, mask, scales)
+        qp = _wrap_serve(params, mask, scales, act_scales)
         batch = ({"embeds": tokens} if cfg.input_mode == "embeddings"
                  and tokens.ndim == 3 else {"tokens": tokens})
         logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,

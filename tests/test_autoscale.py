@@ -1,8 +1,12 @@
-"""Automatic scaling tests (paper §3.2, Thm 2, Fig 4, Eq 10)."""
+"""Automatic scaling tests (paper §3.2, Thm 2, Fig 4, Eq 10).
+
+The property sweep runs under hypothesis when installed and the
+deterministic fixed grid from tests/_hypo.py otherwise."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _hypo import given, settings, st
 
 from repro.core.autoscale import (
     init_scale_state,
@@ -95,7 +99,74 @@ class TestAutomaticScaling:
 
     def test_jit_mode_refreshes_every_step(self):
         qcfg = QuantConfig(mode="moss", weight_scaling="jit")
-        st = init_scale_state(jnp.ones((4, 4)), qcfg)
-        st = update_scale_state(st, jnp.ones((4, 4)) * 7.0, qcfg)
-        assert abs(float(st.s0) - 7.0 / E4M3_MAX) < 1e-9
-        assert int(st.steps_since) == 0
+        s = init_scale_state(jnp.ones((4, 4)), qcfg)
+        s = update_scale_state(s, jnp.ones((4, 4)) * 7.0, qcfg)
+        assert abs(float(s.s0) - 7.0 / E4M3_MAX) < 1e-9
+        assert int(s.steps_since) == 0
+
+
+class TestPredictedScaleProperty:
+    """Property sweep over AdamW trajectories: the predicted scale
+    (paper Eq. 10) upper-bounds the just-in-time scale at EVERY step —
+    across learning rates, refresh intervals, mid-trajectory lr
+    changes, and refresh boundaries (the step right after a refresh is
+    the tightest point of the bound)."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(lr=st.floats(1e-4, 2e-2),
+           interval=st.integers(2, 11),
+           lr_growth=st.floats(0.25, 2.0))
+    def test_predicted_upper_bounds_jit_everywhere(self, lr, interval,
+                                                   lr_growth):
+        qcfg = QuantConfig(mode="moss", weight_scaling="auto",
+                           rescale_interval=int(interval))
+        key = jax.random.PRNGKey(7)
+        w = {"w": jax.random.normal(key, (48, 48)) * 0.02}
+        opt = init_opt_state(w)
+        ocfg = AdamWConfig(weight_decay=0.0)
+        state = init_scale_state(w["w"], qcfg)
+        steps = 3 * int(interval) + 2      # ≥ 3 refresh boundaries
+        for t in range(steps):
+            # lr schedule with a mid-trajectory change: Thm 2 bounds
+            # each step by ITS OWN η, so the prediction must track it
+            lr_t = lr if t < steps // 2 else lr * lr_growth
+            g = {"w": jax.random.normal(jax.random.fold_in(key, t),
+                                        (48, 48))}
+            w, opt = adamw_update(ocfg, w, g, opt,
+                                  jnp.asarray(t, jnp.int32),
+                                  jnp.float32(lr_t))
+            state = update_scale_state(state, w["w"], qcfg)
+            pred = float(predicted_scale(state, jnp.float32(lr_t),
+                                         qcfg))
+            jit_scale = float(jnp.abs(w["w"]).max()) / E4M3_MAX
+            # bias-corrected AdamW steps can exceed η by ≤ ~1.4× for
+            # the first few steps (paper Eq 8) — same slack Thm 2
+            # grants; thereafter the bound is strict
+            slack = 1.4 if t < 5 else 1.0 + 1e-5
+            assert pred * slack >= jit_scale, \
+                (t, int(interval), pred, jit_scale)
+            # and quantizing against the prediction never overflows
+            # beyond that same slack
+            q = float(jnp.abs(w["w"] / max(pred, 1e-30)).max())
+            assert q <= E4M3_MAX * slack, (t, q)
+
+    @settings(max_examples=8, deadline=None)
+    @given(interval=st.integers(2, 9), scale_jump=st.floats(1.0, 8.0))
+    def test_refresh_boundary_resets_to_measured_amax(self, interval,
+                                                      scale_jump):
+        """At a refresh boundary the state re-measures: s0 equals the
+        true amax/FP8_MAX even after the weights grew mid-interval,
+        and steps_since restarts the Eq. 10 ramp."""
+        qcfg = QuantConfig(mode="moss", weight_scaling="auto",
+                           rescale_interval=int(interval))
+        w = jnp.ones((8, 8))
+        state = init_scale_state(w, qcfg)
+        for t in range(int(interval) - 1):
+            state = update_scale_state(state, w * scale_jump, qcfg)
+            assert int(state.steps_since) == t + 1
+            # between refreshes the prediction ignores the growth...
+            assert abs(float(state.s0) - 1.0 / E4M3_MAX) < 1e-9
+        state = update_scale_state(state, w * scale_jump, qcfg)
+        # ...and the boundary snaps to the measured value
+        assert int(state.steps_since) == 0
+        assert abs(float(state.s0) - scale_jump / E4M3_MAX) < 1e-9

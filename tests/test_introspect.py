@@ -1,0 +1,309 @@
+"""Unit tests for the jaxpr introspection layer (core/introspect.py).
+
+The serving acceptance contracts (zero weight quantizes, zero cache
+dequants, zero quantization reductions in the delayed decode graph)
+are only as strong as the counters backing them — so the counters get
+their own direct tests on hand-built jaxprs, positive AND negative:
+a counter that can't tell a softmax max from a quantizer amax would
+pass the acceptance suite for the wrong reason.
+
+The decode-graph acceptance assertions themselves (the reduction-free
+delayed path per recipe) live at the bottom — this file runs in the CI
+tier-1 fast lane.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.formats import (
+    MOSS_CONFIG,
+    PER_GROUP_CONFIG,
+    PER_TENSOR_CONFIG,
+)
+from repro.core.introspect import (
+    count_dot_general_over,
+    count_fp8_casts,
+    count_fp8_dequant_upcasts,
+    count_primitive,
+    count_quant_reductions,
+    count_reduce_max_over,
+    kv_cache_slice_sizes,
+)
+
+E4M3 = jnp.float8_e4m3fn
+
+
+def _quantize(x):
+    """The canonical just-in-time per-tensor quantizer shape:
+    reduce_max → scale arithmetic → fp8 cast."""
+    s = jnp.max(jnp.abs(x)) / 448.0
+    return (x / s).astype(E4M3)
+
+
+# ---------------------------------------------------------------------------
+# Size-keyed counters
+# ---------------------------------------------------------------------------
+
+
+class TestSizeKeyedCounters:
+    def test_count_reduce_max_over_selects_by_operand_size(self):
+        def f(w, x):
+            return jnp.max(jnp.abs(w)) + jnp.max(jnp.abs(x))
+
+        jx = jax.make_jaxpr(f)(jnp.ones((8, 16)), jnp.ones((4,)))
+        assert count_reduce_max_over(jx, {128}) == 1    # the (8,16) one
+        assert count_reduce_max_over(jx, {4}) == 1
+        assert count_reduce_max_over(jx, {128, 4}) == 2
+        assert count_reduce_max_over(jx, {999}) == 0
+
+    def test_count_fp8_casts_all_and_sized(self):
+        def f(w, x):
+            return _quantize(w), _quantize(x)
+
+        jx = jax.make_jaxpr(f)(jnp.ones((8, 16)), jnp.ones((4,)))
+        assert count_fp8_casts(jx) == 2
+        assert count_fp8_casts(jx, {128}) == 1
+        assert count_fp8_casts(jx, {7}) == 0
+        # a bf16 cast is not an fp8 cast
+        jx2 = jax.make_jaxpr(lambda x: x.astype(jnp.bfloat16))(
+            jnp.ones((4,)))
+        assert count_fp8_casts(jx2) == 0
+
+    def test_count_fp8_dequant_upcasts(self):
+        q = jnp.ones((8, 16), E4M3)
+
+        jx = jax.make_jaxpr(lambda q: q.astype(jnp.float32) * 2.0)(q)
+        assert count_fp8_dequant_upcasts(jx, {128}) == 1
+        assert count_fp8_dequant_upcasts(jx, {64}) == 0
+        # fp8→fp8 is a recast, not a dequant; bf16→f32 is not fp8
+        jx2 = jax.make_jaxpr(lambda q: q.astype(jnp.float8_e5m2))(q)
+        assert count_fp8_dequant_upcasts(jx2, {128}) == 0
+        jx3 = jax.make_jaxpr(lambda x: x.astype(jnp.float32))(
+            jnp.ones((8, 16), jnp.bfloat16))
+        assert count_fp8_dequant_upcasts(jx3, {128}) == 0
+
+    def test_count_dot_general_over(self):
+        def f(a, b, c):
+            return (a @ b) @ c
+
+        jx = jax.make_jaxpr(f)(jnp.ones((2, 64)), jnp.ones((64, 32)),
+                               jnp.ones((32, 8)))
+        assert count_dot_general_over(jx, {64 * 32}) == 1
+        assert count_dot_general_over(jx, {32 * 8}) == 1
+        assert count_dot_general_over(jx, {5}) == 0
+
+    def test_kv_cache_slice_sizes_matches_layout(self):
+        from repro.models.attention import cache_len
+
+        cfg = get_config("phi3-mini-3.8b", smoke=True)
+        batch, max_len = 2, 32
+        c = cache_len(cfg, max_len)
+        assert kv_cache_slice_sizes(cfg, batch, max_len) == \
+            {batch * cfg.n_kv * c * cfg.head_dim}
+
+
+# ---------------------------------------------------------------------------
+# count_quant_reductions — positives
+# ---------------------------------------------------------------------------
+
+
+class TestQuantReductionPositives:
+    def test_per_tensor_quantizer_counts_one(self):
+        jx = jax.make_jaxpr(_quantize)(jnp.ones((8, 16)))
+        assert count_quant_reductions(jx) == 1
+
+    def test_two_level_quantizer_counts_both_reductions(self):
+        def moss_like(x):
+            g = jnp.max(jnp.abs(x).reshape(-1, 4), axis=-1)   # micro amax
+            s1 = jnp.max(g)                                   # global amax
+            sub = jnp.exp2(jnp.ceil(jnp.log2(g / s1)))
+            scale = (s1 / 448.0) * sub
+            return (x.reshape(-1, 4) / scale[:, None]).astype(E4M3)
+
+        jx = jax.make_jaxpr(moss_like)(jnp.ones((32,)))
+        assert count_quant_reductions(jx) == 2
+
+    def test_cast_inside_pjit_is_reached(self):
+        """The amax chain must survive a call boundary: the reduction
+        in the outer jaxpr, the fp8 cast inside a jitted callee (the
+        shape real decode graphs have)."""
+
+        @jax.jit
+        def cast(x, s):
+            return (x / s).astype(E4M3)
+
+        def f(x):
+            s = jnp.max(jnp.abs(x)) / 448.0
+            return cast(x, s)
+
+        jx = jax.make_jaxpr(f)(jnp.ones((8,)))
+        assert count_quant_reductions(jx) == 1
+
+    def test_quantizer_inside_scan_counts_once(self):
+        """Structural counting: one reduction in a scan body is one,
+        not one per trip."""
+
+        def body(c, x):
+            return c, _quantize(x)
+
+        def f(xs):
+            return jax.lax.scan(body, 0.0, xs)[1]
+
+        jx = jax.make_jaxpr(f)(jnp.ones((5, 8)))
+        assert count_quant_reductions(jx) == 1
+
+    def test_real_quantizers_count(self):
+        from repro.core.quant import quant_mx, quant_per_group, quant_per_tensor
+
+        x = jnp.ones((4, 128))
+        assert count_quant_reductions(
+            jax.make_jaxpr(lambda x: quant_per_tensor(x).q)(x)) == 1
+        assert count_quant_reductions(
+            jax.make_jaxpr(lambda x: quant_per_group(x).q)(x)) == 1
+        # MOSS two-level: micro-group amax + global amax
+        assert count_quant_reductions(
+            jax.make_jaxpr(lambda x: quant_mx(x).q)(x)) == 2
+
+    def test_delayed_quantizers_count_zero(self):
+        """The delayed variants consume externally supplied scales —
+        by construction no reduction feeds their casts."""
+        from repro.core.quant import quant_mx_delayed, quant_per_group
+
+        x = jnp.ones((4, 128))
+        jx = jax.make_jaxpr(
+            lambda x: quant_per_group(x, scale=jnp.ones((4, 1))).q)(x)
+        assert count_quant_reductions(jx) == 0
+        jx = jax.make_jaxpr(
+            lambda x: quant_mx_delayed(x, 1.0, jnp.zeros((4, 4),
+                                                         jnp.int8)).q)(x)
+        assert count_quant_reductions(jx) == 0
+        assert count_fp8_casts(jx) == 1        # still quantizes, scale-free
+
+
+# ---------------------------------------------------------------------------
+# count_quant_reductions — negative controls
+# ---------------------------------------------------------------------------
+
+
+class TestQuantReductionNegatives:
+    def test_softmax_max_is_not_a_quant_reduction(self):
+        jx = jax.make_jaxpr(jax.nn.softmax)(jnp.ones((4, 16)))
+        assert count_primitive(jx, "reduce_max") >= 1
+        assert count_quant_reductions(jx) == 0
+
+    def test_softmax_feeding_a_fixed_scale_quantize_stays_zero(self):
+        """Attention-like shape: softmax(x) later cast to fp8 with a
+        FIXED scale.  The softmax's reduce_max must not be credited
+        with the downstream cast — its chain dies at the exp."""
+
+        def f(x):
+            p = jax.nn.softmax(x, axis=-1)
+            return (p / 0.003).astype(E4M3)
+
+        jx = jax.make_jaxpr(f)(jnp.ones((4, 16)))
+        assert count_fp8_casts(jx) == 1
+        assert count_quant_reductions(jx) == 0
+
+    def test_masking_max_is_not_a_quant_reduction(self):
+        """A reduce_max used for masking/clipping logic with no fp8
+        cast downstream."""
+
+        def f(x):
+            bound = jnp.max(jnp.abs(x))
+            return jnp.where(jnp.abs(x) > 0.5 * bound, 0.0, x)
+
+        jx = jax.make_jaxpr(f)(jnp.ones((8,)))
+        assert count_primitive(jx, "reduce_max") == 1
+        assert count_quant_reductions(jx) == 0
+
+    def test_chain_dies_at_dot_general(self):
+        """An amax that feeds a GEMM whose *output* is quantized with a
+        fixed scale: the reduction's influence routes through the dot,
+        so it is not a scale computation."""
+
+        def f(x, w):
+            y = (x / jnp.max(jnp.abs(x))) @ w
+            return (y / 0.01).astype(E4M3)
+
+        jx = jax.make_jaxpr(f)(jnp.ones((2, 8)), jnp.ones((8, 4)))
+        assert count_fp8_casts(jx) == 1
+        assert count_quant_reductions(jx) == 0
+
+
+# ---------------------------------------------------------------------------
+# The acceptance contract: reduction-free delayed decode (CI fast lane)
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = {"per_tensor": PER_TENSOR_CONFIG,
+               "per_group": PER_GROUP_CONFIG,
+               "moss": MOSS_CONFIG}
+
+
+def _delayed_decode_jaxpr(mode, arch="phi3-mini-3.8b", delayed=True):
+    from repro.core.actscale import calibrate_act_scales
+    from repro.models.layers import init_tree
+    from repro.models.transformer import init_caches, model_defs
+    from repro.train.steps import make_decode_step, prequantize_params
+
+    cfg = get_config(arch, smoke=True).replace(quant=QUANT_MODES[mode],
+                                               kv_cache_dtype="bf16")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    act = (calibrate_act_scales(cfg, pq.qweights, pq.scales)
+           if delayed else None)
+    caches = init_caches(cfg, 2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = make_decode_step(cfg, scales=pq.scales, act_scales=act)
+    return jax.make_jaxpr(step)(pq.qweights, caches, tok), cfg
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_MODES))
+def test_delayed_decode_graph_is_reduction_free(mode):
+    """THE acceptance assertion: with delayed activation scales (and a
+    bf16 KV cache — the fp8 cache's storage-format write reductions
+    are the one documented exception, see below) the decode jaxpr
+    contains ZERO quantization reductions, while the just-in-time
+    graph contains one (moss: two) per quantized GEMM site."""
+    jx_delayed, _ = _delayed_decode_jaxpr(mode)
+    jx_jit, _ = _delayed_decode_jaxpr(mode, delayed=False)
+    n_jit = count_quant_reductions(jx_jit)
+    per_site = 2 if mode == "moss" else 1
+    assert n_jit == 8 * per_site, n_jit          # 8 sites on this arch
+    assert count_quant_reductions(jx_delayed) == 0
+
+
+def test_fp8_kv_cache_keeps_only_storage_reductions():
+    """Under the fp8 KV cache the delayed decode graph keeps EXACTLY
+    the 2 per-layer-stack cache-write amaxes (K and V storage-format
+    scales, docs/serving.md) — nothing else."""
+    from repro.core.actscale import calibrate_act_scales
+    from repro.models.layers import init_tree
+    from repro.models.transformer import init_caches, model_defs
+    from repro.train.steps import make_decode_step, prequantize_params
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True).replace(
+        quant=MOSS_CONFIG, kv_cache_dtype="fp8")
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    act = calibrate_act_scales(cfg, pq.qweights, pq.scales)
+    caches = init_caches(cfg, 2, 16)
+    jx = jax.make_jaxpr(make_decode_step(cfg, scales=pq.scales,
+                                         act_scales=act))(
+        pq.qweights, caches, jnp.zeros((2, 1), jnp.int32))
+    assert count_quant_reductions(jx) == 2
+
+
+def test_tied_head_decode_has_no_vocab_sized_fp8_cast():
+    """recurrentgemma-2b (the tied-embedding arch): the prequant
+    transposed head removes the per-step re-quantization of
+    embeddingᵀ — no vocab-sized fp8 cast survives in the decode
+    graph, with or without delayed activation scales (the activation
+    feeding the head is d_model-sized, never vocab-sized)."""
+    jx, cfg = _delayed_decode_jaxpr("moss", arch="recurrentgemma-2b")
+    head_sizes = {cfg.d_model * cfg.vocab}
+    assert count_fp8_casts(jx, head_sizes) == 0
+    jx_jit, _ = _delayed_decode_jaxpr("moss", arch="recurrentgemma-2b",
+                                      delayed=False)
+    assert count_fp8_casts(jx_jit, head_sizes) == 0
