@@ -747,6 +747,129 @@ def bench_serve_slo(arch: str = "phi3-mini-3.8b"):
         f"_trace_{n_reqs}reqs_poisson_burst_pool_{pages}pages")
 
 
+# ---------------------------------------------------------------------------
+# Speculative multi-token decode: a repeated-suffix trace (each prompt
+# tiles its own motif — the regime prompt-lookup drafting targets)
+# served A/B: plain decode vs speculative verify at k in {2, 4}.  The
+# speculative engines use a replay draft through the ``ModelDraft``
+# hook (the baseline's own outputs, i.e. a perfectly-aligned small
+# model — upper-bound acceptance), then the same engine re-serves the
+# trace with the host-side ``NgramDraft`` for a model-free acceptance
+# column.  Greedy verification guarantees token-for-token identical
+# output for EVERY draft source, asserted here.  CPU wall clock is
+# emulation; the structural columns carry the mechanism: accepted
+# tokens per verify step (> 1 means each fp8-cache page read now
+# produces multiple committed tokens) and the verify-step jaxpr's
+# quantization-reduction count (the batched-query graph keeps the
+# serving contract: only the 2 per-position K/V storage-write amaxes;
+# docs/speculative-decoding.md).
+# ---------------------------------------------------------------------------
+
+
+def bench_spec_decode(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.core.introspect import count_quant_reductions
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.serving import Engine, ModelDraft, NgramDraft, Request
+    from repro.train.steps import make_prefill_step, make_verify_step
+
+    cfg = get_config(arch, smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_reqs, max_new, slots, max_len = 4, 12, 4, 64
+    # 16-token prompts x 4 rows = one 64-token prefill chunk: all rows
+    # admit together and stay lockstep, so per-step columns divide by
+    # a constant batch (prefix cache off for the same reason — a
+    # timed-trace prefix hit would change the admission timeline vs
+    # warmup)
+    prompts = [np.tile(rng.integers(0, cfg.vocab, size=4,
+                                    dtype=np.int32), 4)
+               for _ in range(n_reqs)]
+
+    def trace(rid0):
+        return [Request(rid=rid0 + i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    def serve(eng, rid0):
+        reqs = trace(rid0)
+        t0 = time.perf_counter()
+        eng.run(reqs, log=None)
+        dt = time.perf_counter() - t0
+        eng.prune_finished()
+        return reqs, dt
+
+    # plain-decode baseline; its outputs double as the replay draft
+    base = Engine(cfg, params, slots, max_len=max_len,
+                  chunk_tokens=64, prefix_cache=False,
+                  spec_decode=False)
+    serve(base, 0)                               # warmup (compiles)
+    breqs, bdt = serve(base, 100)
+    btoks = sum(len(r.out) for r in breqs)
+    truth = {tuple(int(x) for x in p): list(r.out)
+             for p, r in zip(prompts, breqs)}
+
+    def replay(ctx, k):
+        for p, out in truth.items():
+            if tuple(ctx[:len(p)]) == p:
+                done = len(ctx) - len(p)
+                return out[done:done + k]
+        return []
+
+    for k in (2, 4):
+        eng = Engine(cfg, params, slots, max_len=max_len,
+                     chunk_tokens=64, prefix_cache=False,
+                     spec_decode=True, draft=ModelDraft(replay),
+                     spec_k=k)
+        assert eng.spec, "spec gate off on the smoke serving config"
+        serve(eng, 0)                            # warmup
+        s0 = eng.sched.summary()
+        reqs, dt = serve(eng, 100)
+        s1 = eng.sched.summary()
+        toks = sum(len(r.out) for r in reqs)
+        for b, r in zip(breqs, reqs):
+            assert b.out == r.out, "speculative output diverged"
+        vsteps = s1["spec_verify_steps"] - s0["spec_verify_steps"]
+        acc = s1["spec_accepted"] - s0["spec_accepted"]
+        drafted = s1["spec_drafted"] - s0["spec_drafted"]
+        # committed tokens per verify step per resident row: 1
+        # (correction) + accepted drafts
+        tok_step = toks / max(1, vsteps) / slots
+        # same trace through the host-side n-gram draft (no model) on
+        # the warm engine; output identity must survive any proposal
+        # stream
+        eng.draft = NgramDraft()
+        nreqs, _ = serve(eng, 200)
+        for b, r in zip(breqs, nreqs):
+            assert b.out == r.out, "n-gram output diverged"
+        s2 = eng.sched.summary()
+        ndraft = s2["spec_drafted"] - s1["spec_drafted"]
+        nacc = s2["spec_accepted"] - s1["spec_accepted"]
+        # structural: the (B, k) verify graph keeps the serving-graph
+        # quantization contract (2 = K/V storage-write amaxes on the
+        # fp8 cache; the cache itself is never re-reduced).  Traced
+        # abstractly — the pool caches drain to None once the trace
+        # retires, so shape the operands from a prefill eval_shape.
+        cshape = jax.eval_shape(
+            make_prefill_step(cfg, 16, scales=eng.scales,
+                              act_scales=eng.act_scales),
+            eng.params,
+            {"tokens": jax.ShapeDtypeStruct((slots, 12),
+                                            jnp.int32)})[1]
+        jx = jax.make_jaxpr(make_verify_step(
+            cfg, scales=eng.scales, act_scales=eng.act_scales))(
+            eng.params, cshape,
+            jax.ShapeDtypeStruct((slots, k), jnp.int32))
+        row(f"serve_spec_decode_k{k}", dt / toks * 1e6,
+            f"tok_s_{toks / dt:.1f}_base_tok_s_{btoks / bdt:.1f}"
+            f"_tok_per_step_{tok_step:.2f}"
+            f"_accept_rate_{acc / max(1, drafted):.2f}"
+            f"_verify_steps_{vsteps}"
+            f"_ngram_accept_rate_{nacc / max(1, ndraft):.2f}"
+            f"_verify_quant_reductions_{count_quant_reductions(jx)}"
+            f"_trace_{n_reqs}reqs_repeated_suffix_max_new_{max_new}")
+
+
 def _write_json(path: str, rows=None) -> None:
     import json
 
@@ -782,6 +905,7 @@ def main(argv=None) -> None:
         bench_serve_continuous()
         bench_serve_prefix()
         bench_serve_slo()
+        bench_spec_decode()
         _write_json(args.json)
         # serving / decode-attention rows also land in their own
         # artifacts (consumed by benchmarks/report.py --trajectory
@@ -805,6 +929,7 @@ def main(argv=None) -> None:
     bench_serve_continuous()
     bench_serve_prefix()
     bench_serve_slo()
+    bench_spec_decode()
     if args.json:
         _write_json(args.json)
 

@@ -163,6 +163,21 @@ def serve_prefix_cache() -> bool:
     return os.environ.get("REPRO_PREFIX_CACHE", "1").strip() != "0"
 
 
+# Speculative multi-token decode (docs/speculative-decoding.md): the
+# engine proposes k-1 draft tokens per step (greedy n-gram lookup by
+# default, or an injected draft model), verifies all k in ONE forward
+# over the fp8 KV cache and commits the longest matching prefix — the
+# greedy output is token-for-token identical to plain decode, it just
+# arrives in fewer cache reads.  Default OFF: the win depends on the
+# trace (repetitive suffixes accept long drafts; adversarial text
+# accepts none), so it is an opt-in — REPRO_SPEC_DECODE=1 or
+# Engine(spec_decode=True).
+def spec_decode() -> bool:
+    """Whether the serving engine runs speculative verify steps in the
+    decode phase (chunked v2 scheduler only)."""
+    return os.environ.get("REPRO_SPEC_DECODE", "0").strip() == "1"
+
+
 # Decode-attention path (see repro.models.attention._decode_attention
 # and repro.kernels.dispatch.decode_attention):
 #   "kernel" — route through the kernel dispatch: the fused Pallas

@@ -20,32 +20,48 @@ cache dtypes.
 
 Operand contract (see docs/decode-attention.md)
 -----------------------------------------------
-  q         (B, KV, G, Dh)  f32/bf16 — queries grouped by kv head
-                            (GQA: G = n_heads // n_kv; dispatch pads
-                            G up to the 8-row sublane tile)
+  q         (B, KV, R, Dh)  f32/bf16 — queries grouped by kv head,
+                            R = q_len · Gp rows: ``q_len`` queries
+                            (draft-major) of Gp heads each (GQA:
+                            G = n_heads // n_kv; dispatch pads G up to
+                            the 8-row sublane tile).  q_len == 1 is
+                            plain decode; q_len == k is the
+                            speculative verify step — k draft queries
+                            share ONE cache read
   k, v      (B, KV, C, Dh)  e4m3 or bf16 payloads — the cache layout
                             itself (kv-head-major), read in place
   k_scale,  (B, KV, C)      f32 per-(token, kv-head) scales; None for
   v_scale                   the bf16 cache
   n_valid   (B,)            int32 scalar-prefetch (SMEM): per-batch
-                            absolute positions written so far (the
+                            absolute positions written so far AFTER
+                            this step's q_len-token write (the
                             per-slot cache ``idx`` of the continuous-
                             batching engine — docs/continuous-
-                            batching.md); each entry must be ≥ 1
+                            batching.md); each entry must be ≥ q_len
                             (decode attends after a write).  A scalar
                             (shared-ring legacy cache) broadcasts to
-                            (B,) at dispatch.  Slot s of batch row b
-                            is valid iff s < min(n_valid[b], C) — ring
-                            semantics: a wrapped cache (idx ≥ C) is
-                            fully valid, slot order is irrelevant to
-                            softmax
-  returns   (B, KV, G, Dh)  f32 UNCAST attention output
+                            (B,) at dispatch.  For draft j of batch
+                            row b (j = row // Gp), slot s is valid iff
+                            s < min(n_valid[b] - (q_len-1-j), C) — the
+                            in-step causal mask between drafts; at
+                            q_len == 1 this reduces to the ring rule
+                            s < min(n_valid[b], C) (a wrapped cache,
+                            idx ≥ C, is fully valid; slot order is
+                            irrelevant to softmax).  q_len > 1
+                            requires an unwrapped cache
+                            (n_valid ≤ C): rejection-truncation
+                            semantics are undefined on a ring
+  returns   (B, KV, R, Dh)  f32 UNCAST attention output
 
-Grid is (B, KV, C/bc).  With one C block (``bc == C``, the common
-serving case) the kernel computes the exact masked softmax in the same
-operation order as the einsum path — bitwise-identical on a bf16 cache
-(tests/test_decode_attn.py).  With several C blocks it switches to the
-online (flash) rescaling, which matches to f32 round-off.
+Grid is (B, KV, C/bc) — the third axis is the split-K dimension over
+the context.  With one C block (``bc == C``, the common serving case)
+the kernel computes the exact masked softmax in the same operation
+order as the einsum path — bitwise-identical on a bf16 cache
+(tests/test_decode_attn.py).  With several C blocks (C above the
+MAX_SINGLE_BLOCK VMEM ceiling, or an explicit ``bc``) it switches to
+revisiting-free online (flash) rescaling — each C block is visited
+exactly once, m/l/acc carry across grid steps in VMEM scratch — which
+matches to f32 round-off.
 
 Alignment is CALLER-owned only for G (pad to ≥ 8 rows); C and Dh are
 taken as-is — the trailing partial C block is masked in-kernel (scores
@@ -66,12 +82,18 @@ right after ``n_valid``, and the K/V/scale index maps read it:
 so the gather happens in the DMA schedule — each grid step streams one
 physical ``(T, Dh)`` page tile into VMEM and nothing cache-sized is
 ever copied or materialized contiguously in HBM.  Grid is
-(B, KV, pages_per_slot); per-page scores / V tiles / v_scales
-accumulate into VMEM scratch and the LAST page step runs the exact
-masked softmax in the same operation order as the contiguous
-single-block path above, so paged-vs-contiguous decode is
+(B, KV, pages_per_slot).  Up to C = MAX_SINGLE_BLOCK, per-page scores /
+V tiles / v_scales accumulate into VMEM scratch and the LAST page step
+runs the exact masked softmax in the same operation order as the
+contiguous single-block path above, so paged-vs-contiguous decode is
 bitwise-identical given identical page contents
-(tests/test_paged_attn.py).
+(tests/test_paged_attn.py).  Past that ceiling the gathered (R, C) /
+(C, Dh) scratch no longer fits, so the kernel switches to the same
+revisiting-free online-softmax accumulation as the contiguous
+multi-block path (one C block == one page), keeping long contexts
+VMEM-resident page by page with no cache copy — matching the exact
+path to f32 round-off.  Both kernels take the same ``q_len`` batched-
+query extension (see operand contract above).
 """
 
 from __future__ import annotations
@@ -96,7 +118,7 @@ MULTI_BLOCK = 1024
 
 def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
                         bc: int, c_true: int, sm_scale: float,
-                        quantized: bool, op_dtype):
+                        quantized: bool, op_dtype, q_len: int, gp: int):
     if quantized:
         ks_ref, vs_ref, o_ref = rest[:3]
         scratch = rest[3:]
@@ -108,11 +130,11 @@ def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
     # operands mirror runtime_flags.mm: bf16 values (fp8 casts are
     # exact in bf16), f32 accumulation — bf16 on the MXU, f32 under the
     # CPU interpreter, so interpret-vs-ref parity is bitwise
-    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (Gp, Dh)
+    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (R, Dh)
     k = k_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (bc, Dh)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s * sm_scale                                          # (Gp, bc)
+    s = s * sm_scale                                          # (R, bc)
     if quantized:
         # fold the per-(token, kv-head) K scale into the score — the
         # payload itself is never dequantized in HBM
@@ -125,7 +147,19 @@ def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
     # (the continuous-batching engine's per-slot length vector).
     slot = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
     nv = jnp.minimum(nv_ref[pl.program_id(0)], c_true)
-    valid = slot < nv
+    col_valid = slot < nv                                     # (1, bc)
+    if q_len == 1:
+        valid = col_valid
+    else:
+        # in-step causal mask between drafts: row r holds draft
+        # j = r // Gp, whose query position is n_valid[b]-q_len+j, so
+        # it may attend slots < n_valid[b] - (q_len-1-j) — including
+        # its OWN freshly-written K at position n_valid[b]-q_len+j
+        draft = jax.lax.broadcasted_iota(
+            jnp.int32, (q_len * gp, 1), 0) // gp
+        lim = jnp.minimum(
+            nv_ref[pl.program_id(0)] - (q_len - 1 - draft), c_true)
+        valid = slot < lim                                    # (R, bc)
     s = jnp.where(valid, s, NEG_INF)
 
     v = v_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (bc, Dh)
@@ -148,8 +182,10 @@ def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
     # multi-block: online (flash) softmax across C blocks.  The
     # trailing partial block may hold garbage V rows (Pallas pads the
     # edge); their weights are exactly 0 but 0·NaN would poison, so
-    # zero them explicitly.
-    v = jnp.where(valid.reshape(bc, 1), v, 0.0)
+    # zero them explicitly.  Zeroing keys off COLUMN validity (the
+    # widest draft's window): a column a stricter draft row masks
+    # contributes exp-underflowed exact 0 × finite V = 0 to that row.
+    v = jnp.where(col_valid.reshape(bc, 1), v, 0.0)
     m_ref, l_ref, acc_ref = scratch
 
     @pl.when(ci == 0)
@@ -181,22 +217,28 @@ def _decode_attn_kernel(nv_ref, q_ref, k_ref, v_ref, *rest, n_c: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sm_scale", "bc", "interpret"))
+                   static_argnames=("sm_scale", "bc", "interpret",
+                                    "q_len"))
 def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
                        sm_scale: float, bc: int | None = None,
-                       interpret: bool = False):
-    """q: (B, KV, Gp, Dh) with Gp % 8 == 0 (dispatch pads); k/v:
-    (B, KV, C, Dh) e4m3|bf16 payloads; k_scale/v_scale: (B, KV, C) f32
-    or both None (bf16 cache); n_valid: (B,) int32 scalar-prefetch —
-    per-slot valid counts (a (1,) value broadcasts to every row).
-    Returns (B, KV, Gp, Dh) f32.  ``bc`` picks the C block: defaults
+                       interpret: bool = False, q_len: int = 1):
+    """q: (B, KV, R, Dh) with R = q_len·Gp, Gp % 8 == 0 (dispatch
+    pads); k/v: (B, KV, C, Dh) e4m3|bf16 payloads; k_scale/v_scale:
+    (B, KV, C) f32 or both None (bf16 cache); n_valid: (B,) int32
+    scalar-prefetch — per-slot valid counts AFTER this step's write (a
+    (1,) value broadcasts to every row); every entry must be ≥ q_len.
+    Returns (B, KV, R, Dh) f32.  ``bc`` picks the C block: defaults
     to one block (exact softmax) up to MAX_SINGLE_BLOCK, else the
-    online multi-block path."""
+    online multi-block (split-K) path.  ``q_len`` > 1 is the
+    speculative verify step: draft-major query rows under the in-step
+    causal mask (see module docstring)."""
     from repro.core.runtime_flags import mm_operand_dtype
 
-    b, kvh, gp, dh = q.shape
+    b, kvh, rows, dh = q.shape
     c = k.shape[2]
     assert k.shape == v.shape == (b, kvh, c, dh), (q.shape, k.shape)
+    assert rows % q_len == 0, (rows, q_len)
+    gp = rows // q_len
     assert gp % 8 == 0, f"G={gp} not padded to the 8-row sublane tile"
     quantized = k_scale is not None
     if quantized:
@@ -208,7 +250,8 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
     grid = (b, kvh, n_c)
 
     in_specs = [
-        pl.BlockSpec((1, 1, gp, dh), lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, 1, rows, dh),
+                     lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
         pl.BlockSpec((1, 1, bc, dh), lambda bi, ki, ci, nv: (bi, ki, ci, 0)),
         pl.BlockSpec((1, 1, bc, dh), lambda bi, ki, ci, nv: (bi, ki, ci, 0)),
     ]
@@ -220,15 +263,15 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
         ]
         args += [k_scale, v_scale]
     scratch = [] if n_c == 1 else [
-        pltpu.VMEM((gp, 128), jnp.float32),      # running max (col 0)
-        pltpu.VMEM((gp, 128), jnp.float32),      # running sum (col 0)
-        pltpu.VMEM((gp, dh), jnp.float32),       # output accumulator
+        pltpu.VMEM((rows, 128), jnp.float32),    # running max (col 0)
+        pltpu.VMEM((rows, 128), jnp.float32),    # running sum (col 0)
+        pltpu.VMEM((rows, dh), jnp.float32),     # output accumulator
     ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, gp, dh),
+        out_specs=pl.BlockSpec((1, 1, rows, dh),
                                lambda bi, ki, ci, nv: (bi, ki, 0, 0)),
         scratch_shapes=scratch,
     )
@@ -236,9 +279,10 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
     return pl.pallas_call(
         functools.partial(_decode_attn_kernel, n_c=n_c, bc=bc, c_true=c,
                           sm_scale=sm_scale, quantized=quantized,
-                          op_dtype=mm_operand_dtype()),
+                          op_dtype=mm_operand_dtype(), q_len=q_len,
+                          gp=gp),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dh), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rows, dh), jnp.float32),
         interpret=interpret,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
@@ -247,86 +291,144 @@ def decode_attn_pallas(q, k, v, k_scale, v_scale, n_valid, *,
 
 def _paged_decode_kernel(nv_ref, bt_ref, q_ref, k_ref, v_ref, *rest,
                          n_p: int, t: int, sm_scale: float,
-                         quantized: bool, op_dtype):
+                         quantized: bool, op_dtype, q_len: int,
+                         gp: int, online: bool):
     if quantized:
         ks_ref, vs_ref, o_ref = rest[:3]
-        s_acc, v_acc, vs_acc = rest[3:]
+        scratch = rest[3:]
     else:
         o_ref = rest[0]
-        s_acc, v_acc = rest[1:]
+        scratch = rest[1:]
     del bt_ref          # consumed by the index maps, not the body
     pi = pl.program_id(2)
     c_true = n_p * t
 
     # identical operand casts / op order to the contiguous single-block
     # kernel: bf16 values (fp8 casts are exact in bf16), f32 accumulation
-    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (Gp, Dh)
+    q = q_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (R, Dh)
     k = k_ref[0, 0].astype(jnp.bfloat16).astype(op_dtype)     # (t, Dh)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s * sm_scale                                          # (Gp, t)
+    s = s * sm_scale                                          # (R, t)
     if quantized:
         s = s * ks_ref[0, 0][None, :]
 
     # validity: logical slot pi*T + o of row b is live iff it is below
-    # min(n_valid[b], C).  Pages past the frontier hold zeros (fresh
-    # pool) or a retired request's stale-but-finite values — masked
-    # scores underflow to weight 0 exactly, and V rows / v_scales are
-    # zeroed so the ref oracle's 0·finite contributions match bitwise.
+    # min(n_valid[b], C) — per DRAFT row when q_len > 1 (the in-step
+    # causal mask, see module docstring).  Pages past the frontier hold
+    # zeros (fresh pool) or a retired request's stale-but-finite values
+    # — masked scores underflow to weight 0 exactly, and V rows /
+    # v_scales are zeroed so the ref oracle's 0·finite contributions
+    # match bitwise.
     slot = pi * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
     nv = jnp.minimum(nv_ref[pl.program_id(0)], c_true)
-    valid = slot < nv
+    col_valid = slot < nv                                     # (1, t)
+    if q_len == 1:
+        valid = col_valid
+    else:
+        draft = jax.lax.broadcasted_iota(
+            jnp.int32, (q_len * gp, 1), 0) // gp
+        lim = jnp.minimum(
+            nv_ref[pl.program_id(0)] - (q_len - 1 - draft), c_true)
+        valid = slot < lim                                    # (R, t)
     s = jnp.where(valid, s, NEG_INF)
     v = v_ref[0, 0].astype(jnp.float32)                       # (t, Dh)
-    v = jnp.where(valid.reshape(t, 1), v, 0.0)
+    v = jnp.where(col_valid.reshape(t, 1), v, 0.0)
 
-    # stream this page's columns into the (Gp, C) / (C, Dh) scratch;
-    # every column is freshly written once per (bi, ki) sweep, so no
-    # init step is needed
-    s_acc[:, pl.ds(pi * t, t)] = s
-    v_acc[pl.ds(pi * t, t), :] = v
+    if not online:
+        if quantized:
+            s_acc, v_acc, vs_acc = scratch
+        else:
+            s_acc, v_acc = scratch
+        # stream this page's columns into the (R, C) / (C, Dh) scratch;
+        # every column is freshly written once per (bi, ki) sweep, so
+        # no init step is needed
+        s_acc[:, pl.ds(pi * t, t)] = s
+        v_acc[pl.ds(pi * t, t), :] = v
+        if quantized:
+            vs = jnp.where(col_valid, vs_ref[0, 0][None, :], 0.0)
+            vs_acc[:, pl.ds(pi * t, t)] = jnp.broadcast_to(
+                vs, (vs_acc.shape[0], t))
+
+        @pl.when(pi == n_p - 1)
+        def _done():
+            # exact masked softmax over the gathered row, same operation
+            # order as the single-block kernel and the einsum reference
+            # (max -> exp -> sum -> divide -> ×v_scale -> dot)
+            s_full = s_acc[...]
+            m = jnp.max(s_full, axis=-1, keepdims=True)
+            p = jnp.exp(s_full - m)
+            w = p / jnp.sum(p, axis=-1, keepdims=True)
+            if quantized:
+                w = w * vs_acc[:1, :]
+            o_ref[0, 0] = jax.lax.dot_general(
+                w.astype(jnp.bfloat16).astype(op_dtype),
+                v_acc[...].astype(op_dtype),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        return
+
+    # split-K long-context path: C exceeds the gathered-scratch VMEM
+    # ceiling, so accumulate online (flash) across pages instead —
+    # one page per grid step, never revisited, mirroring the contiguous
+    # multi-block path op for op (one C block == one page)
+    m_ref, l_ref, acc_ref = scratch
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m_prev = m_ref[:, :1]                                     # (R, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                    # (R, t)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
     if quantized:
-        vs = jnp.where(valid, vs_ref[0, 0][None, :], 0.0)
-        vs_acc[:, pl.ds(pi * t, t)] = jnp.broadcast_to(
-            vs, (vs_acc.shape[0], t))
+        # re-mask after the scale fold: a garbage-padded v_scale is
+        # NaN under the interpreter and 0 · NaN would poison the dot
+        p = jnp.where(valid, p * vs_ref[0, 0][None, :], 0.0)
+    pv = jax.lax.dot_general(
+        p.astype(jnp.bfloat16).astype(op_dtype), v.astype(op_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
     @pl.when(pi == n_p - 1)
-    def _done():
-        # exact masked softmax over the gathered row, same operation
-        # order as the single-block kernel and the einsum reference
-        # (max -> exp -> sum -> divide -> ×v_scale -> dot)
-        s_full = s_acc[...]
-        m = jnp.max(s_full, axis=-1, keepdims=True)
-        p = jnp.exp(s_full - m)
-        w = p / jnp.sum(p, axis=-1, keepdims=True)
-        if quantized:
-            w = w * vs_acc[:1, :]
-        o_ref[0, 0] = jax.lax.dot_general(
-            w.astype(jnp.bfloat16).astype(op_dtype),
-            v_acc[...].astype(op_dtype),
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+    def _done_online():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[:, :1], _TINY)
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret",
+                                             "q_len"))
 def decode_attn_paged_pallas(q, k, v, k_scale, v_scale, n_valid,
                              block_table, *, sm_scale: float,
-                             interpret: bool = False):
+                             interpret: bool = False, q_len: int = 1):
     """Fused decode attention over the floating-page pool.
 
-    q: (B, KV, Gp, Dh) with Gp % 8 == 0 (dispatch pads); k/v:
-    (P, KV, T, Dh) e4m3|bf16 page-pool payloads; k_scale/v_scale:
+    q: (B, KV, R, Dh) with R = q_len·Gp, Gp % 8 == 0 (dispatch pads);
+    k/v: (P, KV, T, Dh) e4m3|bf16 page-pool payloads; k_scale/v_scale:
     (P, KV, T) f32 or both None (bf16 cache); n_valid: (B,) int32 and
     block_table: (B, pages_per_slot) int32 — BOTH scalar-prefetch
     (SMEM), in that order.  Logical tokens [j*T, (j+1)*T) of row b
     live in physical page block_table[b, j]; the index maps gather
-    them page tile by page tile (see module docstring).  Returns
-    (B, KV, Gp, Dh) f32."""
+    them page tile by page tile (see module docstring).  Up to
+    C = MAX_SINGLE_BLOCK the gathered exact-softmax path runs; past it
+    the online split-K path (f32 round-off vs the oracle).  ``q_len``
+    > 1 is the speculative verify step (draft-major rows, in-step
+    causal mask; every n_valid entry must be ≥ q_len).  Returns
+    (B, KV, R, Dh) f32."""
     from repro.core.runtime_flags import mm_operand_dtype
 
-    b, kvh, gp, dh = q.shape
+    b, kvh, rows, dh = q.shape
     p_pool, kvh_k, t = k.shape[:3]
     assert k.shape == v.shape == (p_pool, kvh, t, dh), (q.shape, k.shape)
+    assert rows % q_len == 0, (rows, q_len)
+    gp = rows // q_len
     assert gp % 8 == 0, f"G={gp} not padded to the 8-row sublane tile"
     n_p = block_table.shape[1]
     assert block_table.shape == (b, n_p)
@@ -334,10 +436,11 @@ def decode_attn_paged_pallas(q, k, v, k_scale, v_scale, n_valid,
     if quantized:
         assert k_scale.shape == v_scale.shape == (p_pool, kvh, t)
     c_true = n_p * t
+    online = c_true > MAX_SINGLE_BLOCK
     grid = (b, kvh, n_p)
 
     in_specs = [
-        pl.BlockSpec((1, 1, gp, dh),
+        pl.BlockSpec((1, 1, rows, dh),
                      lambda bi, ki, pi, nv, bt: (bi, ki, 0, 0)),
         pl.BlockSpec((1, 1, t, dh),
                      lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0, 0)),
@@ -353,17 +456,25 @@ def decode_attn_paged_pallas(q, k, v, k_scale, v_scale, n_valid,
                          lambda bi, ki, pi, nv, bt: (bt[bi, pi], ki, 0)),
         ]
         args += [k_scale, v_scale]
-    scratch = [
-        pltpu.VMEM((gp, c_true), jnp.float32),   # gathered scores
-        pltpu.VMEM((c_true, dh), jnp.float32),   # gathered V (masked)
-    ]
-    if quantized:
-        scratch.append(pltpu.VMEM((8, c_true), jnp.float32))  # v_scales
+    if online:
+        scratch = [
+            pltpu.VMEM((rows, 128), jnp.float32),  # running max (col 0)
+            pltpu.VMEM((rows, 128), jnp.float32),  # running sum (col 0)
+            pltpu.VMEM((rows, dh), jnp.float32),   # output accumulator
+        ]
+    else:
+        scratch = [
+            pltpu.VMEM((rows, c_true), jnp.float32),  # gathered scores
+            pltpu.VMEM((c_true, dh), jnp.float32),    # gathered V
+        ]
+        if quantized:
+            scratch.append(
+                pltpu.VMEM((8, c_true), jnp.float32))  # v_scales
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, gp, dh),
+        out_specs=pl.BlockSpec((1, 1, rows, dh),
                                lambda bi, ki, pi, nv, bt: (bi, ki, 0, 0)),
         scratch_shapes=scratch,
     )
@@ -372,9 +483,10 @@ def decode_attn_paged_pallas(q, k, v, k_scale, v_scale, n_valid,
     return pl.pallas_call(
         functools.partial(_paged_decode_kernel, n_p=n_p, t=t,
                           sm_scale=sm_scale, quantized=quantized,
-                          op_dtype=mm_operand_dtype()),
+                          op_dtype=mm_operand_dtype(), q_len=q_len,
+                          gp=gp, online=online),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dh), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rows, dh), jnp.float32),
         interpret=interpret,
         compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

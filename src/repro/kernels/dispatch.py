@@ -309,9 +309,18 @@ def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
     block (docs/decode-attention.md).  G is padded to the 8-row
     sublane tile here and sliced back; C and Dh pass through unpadded
     (the kernel masks the trailing partial block) so the cache is
-    never copied."""
+    never copied.
+
+    Batched-query (speculative verify) form: a 5-D ``q``
+    (B, KV, S, G, Dh) carries S draft queries per row; ``n_valid`` is
+    the POST-write depth (every entry ≥ S) and draft j's validity is
+    ``slot < min(n_valid[b] - (S-1-j), C)`` — the in-step causal mask
+    (docs/speculative-decoding.md).  Returns (B, KV, S, G, Dh) f32.
+    The kernel path flattens the drafts into S·Gp draft-major rows
+    sharing ONE cache read."""
     backend = _resolve(backend)
-    b, kvh, g, dh = q.shape
+    s_len = q.shape[2] if q.ndim == 5 else 1
+    b, kvh, g, dh = q.shape[0], q.shape[1], q.shape[-2], q.shape[-1]
     if sm_scale is None:
         sm_scale = dh ** -0.5
     nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)
@@ -322,6 +331,12 @@ def decode_attention(q, k, v, k_scale, v_scale, n_valid, *,
         return ref.decode_attn_ref(q, k, v, k_scale, v_scale, nv,
                                    sm_scale=sm_scale)
     gp = _ceil_to(max(g, 8), 8)
+    if q.ndim == 5:
+        qf = _pad_to(q, 3, gp).reshape(b, kvh, s_len * gp, dh)
+        out = decode_attn_pallas(
+            qf, k, v, k_scale, v_scale, nv, sm_scale=sm_scale,
+            interpret=backend == "interpret", q_len=s_len)
+        return out.reshape(b, kvh, s_len, gp, dh)[:, :, :, :g]
     out = decode_attn_pallas(
         _pad_to(q, 2, gp), k, v, k_scale, v_scale, nv,
         sm_scale=sm_scale, interpret=backend == "interpret")
@@ -349,9 +364,12 @@ def decode_attention_paged(q, k, v, k_scale, v_scale, n_valid,
     kernel path threads ``block_table`` in as a second scalar-prefetch
     operand so its index maps perform the same gather inside the DMA
     schedule — nothing cache-sized is materialized in HBM
-    (docs/paged-attention.md)."""
+    (docs/paged-attention.md).  A 5-D ``q`` (B, KV, S, G, Dh) is the
+    batched-query verify form, exactly as in
+    :func:`decode_attention`."""
     backend = _resolve(backend)
-    b, kvh, g, dh = q.shape
+    s_len = q.shape[2] if q.ndim == 5 else 1
+    b, kvh, g, dh = q.shape[0], q.shape[1], q.shape[-2], q.shape[-1]
     if sm_scale is None:
         sm_scale = dh ** -0.5
     nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)
@@ -364,6 +382,12 @@ def decode_attention_paged(q, k, v, k_scale, v_scale, n_valid,
         return ref.decode_attn_paged_ref(q, k, v, k_scale, v_scale, nv,
                                          bt, sm_scale=sm_scale)
     gp = _ceil_to(max(g, 8), 8)
+    if q.ndim == 5:
+        qf = _pad_to(q, 3, gp).reshape(b, kvh, s_len * gp, dh)
+        out = decode_attn_paged_pallas(
+            qf, k, v, k_scale, v_scale, nv, bt, sm_scale=sm_scale,
+            interpret=backend == "interpret", q_len=s_len)
+        return out.reshape(b, kvh, s_len, gp, dh)[:, :, :, :g]
     out = decode_attn_paged_pallas(
         _pad_to(q, 2, gp), k, v, k_scale, v_scale, nv, bt,
         sm_scale=sm_scale, interpret=backend == "interpret")

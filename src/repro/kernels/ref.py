@@ -83,16 +83,38 @@ def decode_attn_ref(q, k, v, k_scale, v_scale, n_valid, *,
     fold into the score (K) and the combine weight (V) instead of
     dequantizing the payload; slot validity per batch row b is
     ``slot < min(n_valid[b], C)`` (ring: a wrapped cache is fully
-    valid).  Returns (B, KV, G, Dh) f32."""
+    valid).  Returns (B, KV, G, Dh) f32.
+
+    Batched-query (speculative verify) form: a 5-D q
+    (B, KV, S, G, Dh) carries S draft queries per row under the
+    in-step causal mask — draft j attends
+    ``slot < min(n_valid[b] - (S-1-j), C)``, with n_valid the
+    POST-write depth (so draft j sees its own freshly-written K/V and
+    every earlier draft's, but no later one's).  Every n_valid entry
+    must be ≥ S.  Returns (B, KV, S, G, Dh) f32."""
     from repro.core.runtime_flags import einsum
 
     b, c = q.shape[0], k.shape[2]
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1),
+                          (b,))
+    if q.ndim == 5:
+        s_len = q.shape[2]
+        scores = einsum("bksgd,bktd->bksgt", q, k,
+                        out_dtype=jnp.float32) * sm_scale
+        if k_scale is not None:
+            scores = scores * k_scale[:, :, None, None, :]
+        lim = jnp.minimum(
+            nv[:, None] - (s_len - 1 - jnp.arange(s_len))[None, :], c)
+        valid = jnp.arange(c)[None, None, :] < lim[:, :, None]
+        scores = jnp.where(valid[:, None, :, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        if v_scale is not None:
+            w = w * v_scale[:, :, None, None, :]
+        return einsum("bksgt,bktd->bksgd", w, v, out_dtype=jnp.float32)
     scores = einsum("bkgd,bktd->bkgt", q, k,
                     out_dtype=jnp.float32) * sm_scale
     if k_scale is not None:
         scores = scores * k_scale[:, :, None, :]
-    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1),
-                          (b,))
     valid = jnp.arange(c)[None, :] < jnp.minimum(nv, c)[:, None]
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)

@@ -239,6 +239,40 @@ def _decode_attention(cfg, q, cache: KVCache, n_valid):
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
+def _verify_attention(cfg, q, cache: KVCache, n_valid):
+    """Speculative verify: S draft queries per slot against the cache
+    the drafts were just written into, in ONE fused step.
+
+    q: (B,S,H,Dh); ``n_valid`` is the POST-write depth (every entry
+    ≥ S).  The (B, KV, S, G, Dh) regroup feeds the batched-query 5-D
+    entry of ``dispatch.decode_attention{,_paged}``: draft j attends
+    ``slot < n_valid[b] - (S-1-j)`` — its own freshly-written position
+    and everything before it, but no later draft's — so row j computes
+    EXACTLY what sequential decode step j would, and greedy
+    accept/reject on the outputs is token-for-token exact
+    (docs/speculative-decoding.md).  Unlike ``_chunk_attention`` the
+    history is never dequantized in HBM: the same fused-kernel /
+    scale-folding-einsum contract as single-token decode applies, so
+    the verify jaxpr keeps 0 cache-sized upcasts/dots."""
+    b, s, h, dh = q.shape
+    kvh = cache.k.shape[1]
+    g = h // kvh
+    # (B,S,H,Dh) -> (B,KV,S,G,Dh): head h of draft j is (kv h//G, g h%G)
+    qg = q.reshape(b, s, kvh, g, dh).transpose(0, 2, 1, 3, 4)
+    backend = "ref" if decode_attn_path() == "einsum" else None
+    if cache.block_table is not None:
+        out = dispatch.decode_attention_paged(
+            qg, cache.k, cache.v, cache.k_scale, cache.v_scale,
+            n_valid, cache.block_table, sm_scale=dh ** -0.5,
+            backend=backend)
+    else:
+        out = dispatch.decode_attention(
+            qg, cache.k, cache.v, cache.k_scale, cache.v_scale, n_valid,
+            sm_scale=dh ** -0.5, backend=backend)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
 def _chunk_attention(cfg, q, k_new, v_new, cache: KVCache, pos0):
     """Chunked-prefill attention: S new prompt tokens at each slot's
     depth against the already-resident history plus an in-chunk causal
@@ -461,13 +495,21 @@ def attention(cfg, p, x, positions, qcfg: QuantConfig,
                 tokens appended at the slot's depth, attending history
                 + an in-chunk causal mask (non-windowed families only;
                 the engine gates this)
+      verify  — speculative verify: S = k tokens ([last committed,
+                drafts...]) written to the cache then attended in one
+                fused batched-query step under the in-step causal
+                mask.  S == 1 degenerates to exactly the decode path.
+                Non-windowed, unwrapped caches only (the engine gates
+                this; docs/speculative-decoding.md)
     """
-    if mode == "decode":
+    if mode in ("decode", "verify"):
         q, k_new, v_new = _project_qkv(cfg, p, x, positions, qcfg)
-        if x.shape[1] == 1:
+        if x.shape[1] == 1 or mode == "verify":
             new_cache = _cache_write(cfg, cache, k_new, v_new)
             n_valid = new_cache.idx
-            out = _decode_attention(cfg, q, new_cache, n_valid)
+            out = (_decode_attention(cfg, q, new_cache, n_valid)
+                   if x.shape[1] == 1
+                   else _verify_attention(cfg, q, new_cache, n_valid))
         else:
             pos0 = cache.idx
             new_cache = _cache_write(cfg, cache, k_new, v_new)

@@ -203,13 +203,16 @@ def moe_block(cfg, p, x, qcfg: QuantConfig, mode: str = "train"):
     from repro.core.actscale import REC
 
     mesh = _active_mesh()
-    use_ep = (mesh is not None and mode != "decode"
+    use_ep = (mesh is not None and mode not in ("decode", "verify")
               and "model" in mesh.axis_names)
     # calibration (REC.recording) forces the dense every-expert path:
     # it is what decode runs, and sort-based dispatch would hand some
     # experts empty/truncated buffers — near-zero amaxes that would
-    # catastrophically clip those experts at decode time
-    if mode == "decode" or REC.recording or (
+    # catastrophically clip those experts at decode time.  The verify
+    # step routes exactly like decode: per-token routing is
+    # batch-composition-independent on the dense path, which the
+    # token-for-token speculative exactness contract relies on.
+    if mode in ("decode", "verify") or REC.recording or (
             not use_ep and cfg.moe_decode_dense and t <= 4096):
         y = _dense_moe(cfg, p, x_flat, probs, top_w, top_ids, qcfg)
         return y.reshape(b, s, d), aux

@@ -327,6 +327,16 @@ def chunk_prefill_supported(cfg, max_len: int) -> bool:
     return attn_mod.cache_len(cfg, max_len) == max_len
 
 
+def spec_verify_supported(cfg, max_len: int) -> bool:
+    """True iff the speculative verify step can run against this
+    (cfg, max_len) (docs/speculative-decoding.md): the same gate as
+    chunked prefill — per-head KVCache families with an unwrapped
+    (C == max_len) cache, since a k-token verify write lands at
+    absolute positions and rejection truncates the length vector,
+    neither of which has ring semantics."""
+    return chunk_prefill_supported(cfg, max_len)
+
+
 def init_paged_pools(cfg, max_len: int, num_pages: int,
                      page_size: int) -> dict:
     """Stacked floating-page pool caches for every segment — the
@@ -368,7 +378,7 @@ def forward(cfg, qcfg: QuantConfig, params, batch: dict,
         b, s = tokens.shape
         x = embed_tokens(cfg, params["embed"], tokens)
 
-    if mode == "decode" and caches is not None:
+    if mode in ("decode", "verify") and caches is not None:
         pos0 = _first_idx(caches)
         if pos0.ndim:        # per-slot cache: (B,) depths -> (B, S)
             positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)

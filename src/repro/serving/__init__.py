@@ -11,7 +11,12 @@
 - ``engine`` — chunked prefill interleaved with batched decode over
   the per-slot length vector, preemption with page swap-to-host
   (``Engine``; ``REPRO_CHUNKED_PREFILL=0`` keeps the v1 whole-prompt
-  prefill path as the A/B baseline).
+  prefill path as the A/B baseline);
+- ``spec`` — draft sources for speculative multi-token decode
+  (``NgramDraft`` greedy prompt-lookup, ``ModelDraft`` small-model
+  hook; docs/speculative-decoding.md).  Opt-in via
+  ``REPRO_SPEC_DECODE=1`` or ``Engine(spec_decode=True)``; greedy
+  output is token-for-token identical to plain decode.
 
 ``launch/serve.py`` is the CLI over this package; the legacy
 contiguous-ring ``Server`` there is the ``REPRO_SERVE_PAGED=0``
@@ -31,8 +36,12 @@ from .paged_cache import (
     page_keys,
 )
 from .scheduler import Request, RequestState, Scheduler, SLOTargets
+from .spec import DraftSource, ModelDraft, NgramDraft
 
 __all__ = [
+    "DraftSource",
+    "ModelDraft",
+    "NgramDraft",
     "Engine",
     "PrefixPlan",
     "greedy_sample",

@@ -18,7 +18,18 @@ Scheduler v2 (the default, ``REPRO_CHUNKED_PREFILL``): one engine
      first output token (stamps TTFT) and the request joins the
      decode batch at its true prompt length;
   4. one batched (B, 1) decode over the resident rows, every row at
-     its own depth.
+     its own depth — or, with speculative decode on
+     (``REPRO_SPEC_DECODE=1`` / ``Engine(spec_decode=True)``), one
+     (B, k) VERIFY step: each row gambles up to ``k-1`` host-proposed
+     draft tokens (greedy n-gram prompt lookup by default, or an
+     injected draft model), all k positions run through ONE forward
+     over the fp8 KV cache, and the longest draft prefix matching the
+     model's own argmaxes commits together with the model's
+     correction token.  Greedy output is token-for-token identical to
+     plain decode; rejected drafts truncate for free (the per-slot
+     length vector is the truth, docs/speculative-decoding.md).  The
+     draft length adapts to the measured accept rate
+     (``Scheduler.draft_len``).
 
 One compiled mixed-step graph serves both shapes (3) and (4) — there
 is no per-prompt-bucket prefill compile and no B=1 whole-prompt
@@ -74,15 +85,18 @@ from repro.core.runtime_flags import (
     serve_prefix_cache,
     serve_prequant,
 )
+from repro.core.runtime_flags import spec_decode as spec_decode_flag
 from repro.models.transformer import (
     chunk_prefill_supported,
     init_caches,
     map_cache_nodes,
     paged_decode_supported,
+    spec_verify_supported,
 )
 from repro.train.steps import (
     make_decode_step,
     make_prefill_step,
+    make_verify_step,
     prequantize_params,
     serve_weight_scales,
 )
@@ -96,6 +110,7 @@ from .paged_cache import (
     page_keys,
 )
 from .scheduler import Request, RequestState, Scheduler, SLOTargets
+from .spec import DraftSource, NgramDraft
 
 PROMPT_BUCKET = 16
 CHUNK_TOKENS = 32
@@ -170,7 +185,10 @@ class Engine:
                  chunk_tokens: int = CHUNK_TOKENS,
                  eos_id: int | None = None,
                  prefix_cache: bool | None = None,
-                 slo: SLOTargets | None = None):
+                 slo: SLOTargets | None = None,
+                 spec_decode: bool | None = None,
+                 draft: DraftSource | None = None,
+                 spec_k: int = 4):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"serving engine drives token models; {cfg.name} has "
@@ -216,6 +234,27 @@ class Engine:
                                   else prefix_cache))
         self.chunk_tokens = max(1, min(chunk_tokens,
                                        self.kv.slot_tokens))
+        # speculative multi-token decode (docs/speculative-decoding.md)
+        # rides on the v2 mixed step: the verify graph needs per-slot
+        # depths and an unwrapped cache, exactly the chunked-prefill
+        # support surface.  Opt-in (constructor arg wins over the env
+        # flag); greedy output stays token-for-token identical either
+        # way, so the toggle is pure performance.
+        # ... and batch-shape-independent activation scaling: with
+        # just-in-time act amaxes a (B, k) verify window measures a
+        # different per-tensor scale than the (B, 1) steps it
+        # replaces, breaking token-for-token parity.  Delayed
+        # (calibrated) scales — the serving default — or the bf16
+        # pipeline are exact.
+        self.spec = ((spec_decode if spec_decode is not None
+                      else spec_decode_flag())
+                     and self.chunked
+                     and spec_verify_supported(cfg, max_len)
+                     and (self.act_scales is not None
+                          or cfg.quant.mode == "bf16"))
+        self.draft: DraftSource = (draft if draft is not None
+                                   else NgramDraft())
+        self.spec_k = max(1, int(spec_k))
         self._staging: _Staging | None = None
         self._preempted: deque[tuple[Request, dict]] = deque()
         self.prefill_calls = 0
@@ -236,6 +275,13 @@ class Engine:
                               act_scales=self.act_scales))
         self.decode = jax.jit(
             make_decode_step(self.cfg, scales=self.scales,
+                             act_scales=self.act_scales),
+            donate_argnums=(1,))
+        # the speculative verify step ((B, k) tokens -> (B, k, V)
+        # logits); jit is lazy, so non-speculative engines never
+        # compile it
+        self.verify = jax.jit(
+            make_verify_step(self.cfg, scales=self.scales,
                              act_scales=self.act_scales),
             donate_argnums=(1,))
 
@@ -322,7 +368,10 @@ class Engine:
         self._swap_in_preempted()
         self._chunk_phase()
         self._retire()          # an attached request may finish
-        self._decode_once()     # instantly (max_new == 1 / EOS)
+        if self.spec:           # instantly (max_new == 1 / EOS)
+            self._verify_once()
+        else:
+            self._decode_once()
 
     # -- v2: retirement ------------------------------------------------
     def _retire(self):
@@ -575,6 +624,86 @@ class Engine:
         nxt = np.asarray(greedy_sample(logits))
         for i, rid in enumerate(list(rows)):
             self.sched.on_token(self.requests[rid], int(nxt[i]))
+
+    # -- speculative verify (docs/speculative-decoding.md) -------------
+    def _verify_once(self):
+        """One speculative verify step over the resident rows: propose
+        up to ``k-1`` draft tokens per row, run ALL ``k`` positions
+        ([last output, drafts...]) through ONE (B, k) forward over the
+        paged fp8 cache, and commit per row the longest draft prefix
+        matching the model's own argmaxes plus the model's correction
+        token.  Greedy output is token-for-token identical to plain
+        decode — position j's logits equal the sequential step's
+        because the per-draft kernel mask reproduces each step's
+        validity window exactly (docs/speculative-decoding.md).
+
+        ``k`` is clamped so NO row can overrun its ``max_new`` budget
+        or its slot's write window, and collapses to a plain
+        ``_decode_once`` (same compiled (B, 1) graph) when the clamp
+        or an empty proposal round leaves nothing to gamble on."""
+        rows = self.kv.rows
+        if not rows:
+            return
+        reqs = [self.requests[rid] for rid in rows]
+        k = self.sched.draft_len(self.spec_k)
+        for i, r in enumerate(reqs):
+            # a k-step commits up to k tokens and writes k positions:
+            # stay inside every row's generation budget and its slot
+            k = min(k, r.max_new - len(r.out),
+                    self.kv.slot_tokens - self.kv.lengths[i])
+        props = ([list(self.draft.propose(r, k - 1))[:k - 1]
+                  for r in reqs] if k > 1 else [])
+        if k > 1:
+            k = min(k, 1 + max(len(p) for p in props))
+        if k <= 1:
+            self._decode_once()
+            return
+        feed = np.zeros((len(rows), k), np.int32)
+        n_prop = []
+        for i, r in enumerate(reqs):
+            feed[i, 0] = r.out[-1]
+            p = props[i][:k - 1]
+            n_prop.append(len(p))
+            # unproposed tail slots stay zero-padded: a pad token only
+            # commits on a coincidental argmax match, which is by
+            # definition the token plain decode would have produced
+            feed[i, 1:1 + len(p)] = p
+        if self.float_pages:
+            # CoW barrier + restamp over the FULL k-token write window
+            self._grow_or_preempt(
+                lambda: self.kv.prepare_decode(write_tokens=k))
+        logits, self.kv.caches = self.verify(
+            self.params, self.kv.caches, jnp.asarray(feed))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))      # (B, k)
+        advs, accepted = [], 0
+        for i, rid in enumerate(list(rows)):
+            req = self.requests[rid]
+            drafts_in, done, j = 0, False, 0
+            # accept drafts while they match the model's own argmax:
+            # logits[i, j] is the model's prediction AFTER consuming
+            # feed[i, :j+1], i.e. exactly the sequential step's logits
+            while j < k - 1 and int(feed[i, j + 1]) == int(nxt[i, j]):
+                done = self.sched.on_token(req, int(feed[i, j + 1]))
+                drafts_in += 1
+                j += 1
+                if done:
+                    break         # EOS / budget inside the window
+            if not done:
+                # first mismatch (or window exhausted): the model's
+                # correction token — always committable, so a verify
+                # step never stalls
+                self.sched.on_token(req, int(nxt[i, j]))
+            # cache depth advances one position per committed token
+            # whose KV the step wrote: out[-1] + accepted drafts (the
+            # correction token's KV, like plain decode's sample, waits
+            # for the next step's write)
+            advs.append(drafts_in + (0 if done else 1))
+            accepted += min(drafts_in, n_prop[i])
+        self.kv.commit(advs)
+        # denominator = the whole (k-1)·B draft window, so padded
+        # slots count as misses and the EMA shortens k when the draft
+        # source cannot fill the window
+        self.sched.on_verify((k - 1) * len(rows), accepted)
 
     # -- driver --------------------------------------------------------
     def _idle(self) -> bool:

@@ -446,6 +446,19 @@ def _write_row(big, one, row, length):
 write_row = _write_row
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _truncate_idx(big, lengths):
+    """Restamp every (L, B) device ``idx`` leaf from the host lengths
+    vector ((B,) int32) — the verify-step graph advanced idx by the
+    full draft length regardless of how many drafts were accepted, so
+    after a rejection the host lengths are the truth and the device
+    idx must be walked back (rejected drafts' cache slots then sit
+    past idx: masked by validity, overwritten by the next write)."""
+    return map_cache_nodes(
+        big, lambda n: n._replace(idx=jnp.broadcast_to(
+            lengths[None, :].astype(jnp.int32), n.idx.shape)))
+
+
 @jax.jit
 def _swap_shrink(big, row):
     """Move the last row into ``row`` and drop the last row — retiring
@@ -582,6 +595,22 @@ class PagedKVCache:
             assert owner is not None, "decode ran with a released row"
             self.lengths[i] += 1
             self.allocator.grow(owner, self._resident(self.lengths[i]))
+
+    def commit(self, advs) -> None:
+        """Mirror one VERIFY step: row i committed ``advs[i]`` tokens
+        (accepted drafts + the correction token).  Unlike floating
+        placement — whose idx leaves are restamped from host lengths
+        every step anyway — the identity rows carry a live device idx
+        that the verify graph advanced by the FULL draft length, so a
+        rejection must walk it back: one donated restamp from the
+        host lengths truncates every row at once."""
+        assert len(advs) == len(self.rows)
+        for i, owner in enumerate(self.rows):
+            assert owner is not None, "verify ran with a released row"
+            self.lengths[i] += int(advs[i])
+            self.allocator.grow(owner, self._resident(self.lengths[i]))
+        self.caches = _truncate_idx(
+            self.caches, jnp.asarray(self.lengths, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -898,25 +927,33 @@ class FloatingPageCache:
         self.lengths.pop()
 
     # -- decode bookkeeping --------------------------------------------
-    def prepare_decode(self) -> None:
-        """Pre-step barrier: make every row's write-target page
+    def prepare_decode(self, write_tokens: int = 1) -> None:
+        """Pre-step barrier: make every row's write-target pages
         private (fresh past the frontier, copy-on-write out of shared
         or hash-registered pages) and restamp the device idx /
         block-table leaves from host state.  MUST run before each
         decode step — the step's in-graph append assumes its target
-        page is exclusively owned."""
+        pages are exclusively owned.  ``write_tokens`` > 1 (a
+        speculative verify step, docs/speculative-decoding.md) ensures
+        every page positions [lengths[i], lengths[i]+write_tokens)
+        touch; the sequential page walk keeps the fresh-append
+        invariant (``page_idx == len(bt.pages)``) when the window
+        spans several new pages."""
         t = self.page_size
         for i, owner in enumerate(self.rows):
             assert owner is not None, "decode ran with a released row"
-            kind, src, dst = self.allocator.ensure_writable(
-                owner, self.lengths[i] // t)
-            if kind == "cow":
-                self.cow_copies += 1
-                s, d = jnp.int32(src), jnp.int32(dst)
-                self.caches = {
-                    name: _pool_copy_page(seg, s, d)
-                    if seg is not None else None
-                    for name, seg in self.caches.items()}
+            lo = self.lengths[i]
+            hi = lo + write_tokens
+            for j in range(lo // t, (hi - 1) // t + 1):
+                kind, src, dst = self.allocator.ensure_writable(
+                    owner, j)
+                if kind == "cow":
+                    self.cow_copies += 1
+                    s, d = jnp.int32(src), jnp.int32(dst)
+                    self.caches = {
+                        name: _pool_copy_page(seg, s, d)
+                        if seg is not None else None
+                        for name, seg in self.caches.items()}
         self._restamp()
 
     def _restamp(self) -> None:
@@ -955,3 +992,19 @@ class FloatingPageCache:
         for i, owner in enumerate(self.rows):
             assert owner is not None, "decode ran with a released row"
             self.lengths[i] += 1
+
+    def commit(self, advs) -> None:
+        """Mirror one VERIFY step: row i committed ``advs[i]`` tokens
+        (accepted drafts + the correction token).  Only the host
+        lengths move — truncation of rejected drafts is free under
+        floating placement because the idx/block-table leaves are
+        restamped from these lengths before the next step
+        (``prepare_decode``), so the garbage the verify write left
+        past the committed frontier sits masked (slot >= n_valid)
+        until the next write overwrites it.  Pre-ensured frontier
+        pages past the commit stay in the block table as the next
+        step's (private, writable) targets."""
+        assert len(advs) == len(self.rows)
+        for i, owner in enumerate(self.rows):
+            assert owner is not None, "verify ran with a released row"
+            self.lengths[i] += int(advs[i])

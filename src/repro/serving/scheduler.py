@@ -115,6 +115,13 @@ class Scheduler:
         self.slo = slo or SLOTargets()
         self.queue: deque[Request] = deque()
         self.all: list[Request] = []
+        # speculative-decode accept-rate EMA (docs/speculative-
+        # decoding.md): starts optimistic so the first steps probe the
+        # full draft length, then tracks the trace
+        self.accept_rate: float = 1.0
+        self.verify_steps: int = 0
+        self.drafted: int = 0
+        self.accepted: int = 0
 
     def submit(self, requests) -> None:
         now = self.clock()
@@ -146,6 +153,30 @@ class Scheduler:
         if hit_stop(req, token):
             req.state = RequestState.FINISHED
         return req.done
+
+    def on_verify(self, proposed: int, accepted: int) -> None:
+        """Record one speculative verify step: ``proposed`` draft
+        tokens were gambled on across the batch, ``accepted`` of them
+        matched the model's own argmaxes.  Updates the accept-rate EMA
+        (0.8·prev + 0.2·step — slow enough to ride out one adversarial
+        window, fast enough to follow a phase change in the trace)."""
+        self.verify_steps += 1
+        self.drafted += int(proposed)
+        self.accepted += int(accepted)
+        if proposed > 0:
+            self.accept_rate = (0.8 * self.accept_rate
+                                + 0.2 * accepted / proposed)
+
+    def draft_len(self, k_max: int) -> int:
+        """Accept-rate-aware draft length for the next verify step:
+        scale the configured maximum by the EMA, floored at 2 — a
+        verify step below 2 proposes nothing, so the EMA would freeze
+        at its low-water mark and never recover.  (The engine may
+        still clamp to 1 for capacity/budget reasons; that bypasses
+        this policy, not the EMA.)"""
+        if k_max <= 2:
+            return max(1, k_max)
+        return max(2, min(k_max, round(k_max * self.accept_rate)))
 
     # -- SLO policy ----------------------------------------------------
     def chunk_budget(self) -> int:
@@ -212,4 +243,9 @@ class Scheduler:
             "prefix_hit_requests": sum(r.prefix_pages > 0 for r in done),
             "prefill_tokens_skipped": sum(r.prefill_skipped
                                           for r in done),
+            "spec_verify_steps": self.verify_steps,
+            "spec_drafted": self.drafted,
+            "spec_accepted": self.accepted,
+            "spec_accept_rate": (self.accepted / self.drafted
+                                 if self.drafted else float("nan")),
         }

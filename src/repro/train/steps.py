@@ -423,3 +423,30 @@ def make_decode_step(cfg, scales=None, act_scales=None):
         return logits, caches
 
     return decode_step
+
+
+def make_verify_step(cfg, scales=None, act_scales=None):
+    """Speculative verify step (docs/speculative-decoding.md).
+
+    The built step takes ``tokens (B, k)`` = [last committed token,
+    draft_1 .. draft_{k-1}] per row, writes all k positions to the
+    cache and returns logits for ALL k positions in one forward —
+    position j's logits are what sequential decode would emit after
+    feeding tokens[:, :j+1], so greedy accept/reject against them is
+    token-for-token exact.  Unlike the chunked-prefill path the
+    history is attended through the fused batched-query decode kernel
+    (mode="verify"): no cache-sized dequant upcasts, no quant
+    reductions beyond the k-position storage writes.  The caller
+    truncates per-slot lengths on rejection (the written-but-rejected
+    positions are simply never covered by ``n_valid`` again)."""
+    mask = serve_quant_mask(cfg, scales)
+    qcfg = cfg.quant
+
+    def verify_step(params, caches, tokens):
+        """tokens: (B, k) int32 -> ((B, k, V) logits, caches)."""
+        qp = _wrap_serve(params, mask, scales, act_scales)
+        logits, caches, _ = forward(cfg, qcfg, qp, {"tokens": tokens},
+                                    caches, mode="verify")
+        return logits, caches
+
+    return verify_step

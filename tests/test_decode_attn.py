@@ -269,3 +269,108 @@ def test_kernel_path_decode_all_cache_archs(monkeypatch, arch):
         pq.qweights, caches, toks[:, :1])
     scale = float(jnp.abs(lo_e).max()) + 1e-6
     assert float(jnp.abs(lo_k - lo_e).max()) / scale < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Split-K over the context axis C (long-context decode past the
+# single-block VMEM ceiling) — docs/decode-attention.md
+# ---------------------------------------------------------------------------
+
+from _hypo import given, settings, st  # noqa: E402
+from repro.kernels.decode_attn import (  # noqa: E402
+    MAX_SINGLE_BLOCK,
+    decode_attn_paged_pallas,
+)
+from repro.kernels.ref import decode_attn_paged_ref  # noqa: E402
+
+
+def _long_ctx(c, seed=0, b=1, kvh=2, g=8, dh=32, quantized=True):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, dh)), jnp.bfloat16)
+    kf = jnp.asarray(rng.standard_normal((b, kvh, c, dh)))
+    vf = jnp.asarray(rng.standard_normal((b, kvh, c, dh)))
+    if quantized:
+        k, ks = A._quant_kv(kf)
+        v, vs = A._quant_kv(vf)
+    else:
+        k, v = kf.astype(jnp.bfloat16), vf.astype(jnp.bfloat16)
+        ks = vs = None
+    return q, k, v, ks, vs
+
+
+@pytest.mark.parametrize("n_valid", [
+    2500,                    # partial: masked tail inside the last block
+    MAX_SINGLE_BLOCK + 512,  # exactly the context depth (C == 2560)
+    4000,                    # wrapped ring: idx past C clamps to C
+])
+@pytest.mark.parametrize("quantized", [True, False])
+def test_split_k_contiguous_past_single_block_ceiling(n_valid,
+                                                      quantized):
+    """C > MAX_SINGLE_BLOCK auto-selects the online split-K grid
+    ((B, KV, n_c) with revisiting-free accumulation) — matching an
+    explicit single-block launch of the SAME kernel at the bf16
+    combine-weight noise floor.  Before split-K these contexts needed
+    the einsum fallback (cache-sized dequant); now the default ``bc``
+    covers them."""
+    c = MAX_SINGLE_BLOCK + 512
+    q, k, v, ks, vs = _long_ctx(c, quantized=quantized)
+    nv = jnp.asarray([n_valid], jnp.int32)
+    multi = decode_attn_pallas(q, k, v, ks, vs, nv, sm_scale=32 ** -0.5,
+                               interpret=True)       # bc -> MULTI_BLOCK
+    single = decode_attn_pallas(q, k, v, ks, vs, nv,
+                                sm_scale=32 ** -0.5, bc=c,
+                                interpret=True)      # one exact block
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(single),
+                               rtol=5e-3, atol=5e-3)
+    # and both agree with the einsum oracle
+    ref = dispatch.decode_attention(q, k, v, ks, vs, nv, backend="ref")
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("quantized", [True, False])
+def test_split_k_paged_online_past_single_block_ceiling(quantized):
+    """The paged kernel past C = MAX_SINGLE_BLOCK: the per-page grid
+    switches from gather-then-exact-softmax to the online split-K
+    accumulation (one page visited per step, never revisited, no
+    (rows, C) VMEM scratch) — against the gather-pages einsum oracle
+    at the combine-weight noise floor."""
+    t, n_p = 256, 10                       # C = 2560 > 2048
+    c = t * n_p
+    q, k, v, ks, vs = _long_ctx(c, seed=3, quantized=quantized)
+    # identity block table, one slot; partial depth in the last page
+    bt = jnp.arange(n_p, dtype=jnp.int32).reshape(1, n_p)
+    pool = lambda a: (None if a is None else
+                      a[0].reshape(a.shape[1], n_p, t,
+                                   *a.shape[3:]).swapaxes(0, 1))
+    pk, pv, pks, pvs = pool(k), pool(v), pool(ks), pool(vs)
+    for n_valid in (c, c - t // 2):
+        nv = jnp.asarray([n_valid], jnp.int32)
+        out = decode_attn_paged_pallas(q, pk, pv, pks, pvs, nv, bt,
+                                       sm_scale=32 ** -0.5,
+                                       interpret=True)
+        ref = decode_attn_paged_ref(q, pk, pv, pks, pvs, nv, bt,
+                                    sm_scale=32 ** -0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.sampled_from([64, 96, 130, 192, 256]),
+       bc=st.sampled_from([32, 64, 128]),
+       edge=st.integers(0, 5))
+def test_split_k_block_boundary_property(c, bc, edge):
+    """Property sweep over (C, block size, n_valid) boundary
+    geometries: n_valid at 1, one-off-block edges, the last block's
+    start and the full/overfull depths — the per-block masking and
+    online rescaling must agree with the oracle whatever the block
+    decomposition."""
+    boundary = [1, bc - 1, bc, bc + 1, c - 1, c + 7][edge]
+    n_valid = max(1, min(boundary, c + 7))
+    q, k, v, ks, vs = _long_ctx(c, seed=c + bc + edge)
+    nv = jnp.asarray([n_valid], jnp.int32)
+    got = decode_attn_pallas(q, k, v, ks, vs, nv, sm_scale=32 ** -0.5,
+                             bc=bc, interpret=True)
+    ref = dispatch.decode_attention(q, k, v, ks, vs, nv, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
