@@ -100,7 +100,7 @@ def inject(md_path: str, marker: str, table: str):
 TRAJECTORY_PREFIXES = ("moe_grouped_vs_vmapped", "dispatch_",
                        "serve_prequant_", "serve_delayed_",
                        "serve_continuous_", "serve_prefix_",
-                       "serve_slo_", "serve_spec_",
+                       "serve_slo_", "serve_spec_", "serve_obs_",
                        "table2_train_step_", "decode_attn_")
 
 BENCH_PATTERNS = ("experiments/bench/*/BENCH_*.json", "BENCH_*.json")

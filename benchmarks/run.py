@@ -870,6 +870,82 @@ def bench_spec_decode(arch: str = "phi3-mini-3.8b"):
             f"_trace_{n_reqs}reqs_repeated_suffix_max_new_{max_new}")
 
 
+# ---------------------------------------------------------------------------
+# Observability overhead: the SAME trace served all-telemetry-on
+# (REPRO_QUANT_HEALTH=1 + span tracing) vs all-off.  The contract
+# (docs/observability.md) is that off is FREE — the off-path jaxpr is
+# byte-identical, asserted in tests/test_obs.py — and that on costs
+# under a few percent of tok/s: the health stats are tiny per-site
+# reductions riding existing steps, the spans are host-side
+# perf_counter pairs.  CPU wall clock is emulation; overhead_pct is
+# the structural column.
+# ---------------------------------------------------------------------------
+
+
+def bench_obs_overhead(arch: str = "phi3-mini-3.8b"):
+    from repro.configs.registry import get_config
+    from repro.models.layers import init_tree
+    from repro.models.transformer import model_defs
+    from repro.obs.trace import get_tracer
+    from repro.serving import Engine, Request
+
+    cfg = get_config(arch, smoke=True)
+    params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_reqs, max_new, slots, max_len = 8, 10, 4, 64
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(8, 24)),
+                            dtype=np.int32) for _ in range(n_reqs)]
+
+    def serve(eng, rid0):
+        reqs = [Request(rid=rid0 + i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        eng.run(reqs, log=None)
+        dt = time.perf_counter() - t0
+        eng.prune_finished()
+        return sum(len(r.out) for r in reqs), dt, reqs
+
+    stats = {}
+    outs = {}
+    saved = os.environ.get("REPRO_QUANT_HEALTH")
+    tracer = get_tracer()
+    for tag in ("off", "on"):
+        if tag == "on":
+            os.environ["REPRO_QUANT_HEALTH"] = "1"
+            tracer.clear()
+            tracer.enable()       # ring buffer only, no output path
+        else:
+            os.environ.pop("REPRO_QUANT_HEALTH", None)
+        try:
+            eng = Engine(cfg, params, slots, max_len=max_len,
+                         prefix_cache=False)
+            assert eng.health == (tag == "on")
+            serve(eng, 0)                         # warmup (compiles)
+            toks, dt, reqs = serve(eng, 100)
+            stats[tag] = {"us": dt / toks * 1e6, "tok_s": toks / dt}
+            outs[tag] = [r.out for r in reqs]
+            if tag == "on":
+                s = eng.stats()
+                stats[tag]["sites"] = len(s["quant_health"]["sites"])
+                stats[tag]["events"] = len(tracer)
+        finally:
+            if tag == "on":
+                tracer.disable()
+            (os.environ.pop("REPRO_QUANT_HEALTH", None) if saved is None
+             else os.environ.__setitem__("REPRO_QUANT_HEALTH", saved))
+    assert outs["on"] == outs["off"], \
+        "telemetry changed the greedy output stream"
+    on, off = stats["on"], stats["off"]
+    overhead = (on["us"] - off["us"]) / off["us"] * 100
+    row("serve_obs_overhead", on["us"],
+        f"tok_s_on_{on['tok_s']:.1f}_tok_s_off_{off['tok_s']:.1f}"
+        f"_overhead_pct_{overhead:.1f}"
+        f"_health_sites_{on['sites']}"
+        f"_trace_events_{on['events']}"
+        f"_trace_{n_reqs}reqs_max_new_{max_new}")
+
+
 def _write_json(path: str, rows=None) -> None:
     import json
 
@@ -906,6 +982,7 @@ def main(argv=None) -> None:
         bench_serve_prefix()
         bench_serve_slo()
         bench_spec_decode()
+        bench_obs_overhead()
         _write_json(args.json)
         # serving / decode-attention rows also land in their own
         # artifacts (consumed by benchmarks/report.py --trajectory
@@ -930,6 +1007,7 @@ def main(argv=None) -> None:
     bench_serve_prefix()
     bench_serve_slo()
     bench_spec_decode()
+    bench_obs_overhead()
     if args.json:
         _write_json(args.json)
 

@@ -9,9 +9,11 @@ wave shares a system prompt: its page-aligned prefix is stored once
 and served copy-on-write, and only each request's unshared suffix
 chunk-prefills (docs/paged-attention.md).
 
-  PYTHONPATH=src python examples/serve_batched.py
+  PYTHONPATH=src python examples/serve_batched.py \
+      [--metrics-out metrics.json] [--trace-out trace.json]
 """
 
+import argparse
 import os
 import sys
 
@@ -27,6 +29,18 @@ from repro.serving import Engine, Request
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the metrics-registry snapshot as JSON "
+                         "at exit (docs/observability.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record engine step spans and write the "
+                         "Chrome-trace JSON at exit")
+    args = ap.parse_args()
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import get_tracer
+        tracer = get_tracer().enable(path=args.trace_out)
     cfg = get_config("phi3-mini-3.8b", smoke=True)
     params = init_tree(model_defs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
@@ -93,6 +107,14 @@ def main():
           f"skipped {s['prefill_tokens_skipped']} | pages shared "
           f"{s['pages_shared']} | CoW copies {s['cow_copies']} | "
           f"peak pool pages {s['peak_pool_pages']}")
+
+    if tracer is not None:
+        print(f"trace: {tracer.save()} ({len(tracer)} events)")
+    if args.metrics_out:
+        from repro.obs.metrics import get_registry
+        with open(args.metrics_out, "w") as f:
+            f.write(get_registry().to_json(indent=2))
+        print(f"metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

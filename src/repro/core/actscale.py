@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .formats import TINY, QuantConfig, e8m0_encode, fp8_max
+from .formats import TINY, QuantConfig, e8m0_decode, e8m0_encode, fp8_max
 
 DEFAULT_MARGIN = 1.25
 CALIBRATION_TOKENS = 32
@@ -142,6 +142,27 @@ class _Recorder:
 
 
 REC = _Recorder()
+
+
+def effective_group_scales(a: ActScale, cfg: QuantConfig,
+                           k: int) -> tuple[jax.Array, int]:
+    """The per-quantization-group effective scale an ``ActScale``
+    slice implies, for a GEMM whose inner dim is ``k`` — the
+    quant-health tap's view of the calibrated range
+    (docs/observability.md): a group's values clip once their
+    magnitude exceeds ``scale_g · FP8_MAX``.
+
+    Returns ``(scales (K'/g,), g)`` where ``g`` is the recipe's group
+    width (``k`` itself for per_tensor — one group) and ``K'`` is
+    ``k`` zero-padded up to a multiple of ``g``, matching the padding
+    the delayed quantizers apply."""
+    if cfg.mode == "moss":
+        s1 = jnp.maximum(jnp.asarray(a.s, jnp.float32), TINY)
+        ss = e8m0_decode(jnp.asarray(a.sub, jnp.int8))
+        return (ss * s1).reshape(-1), cfg.micro_group
+    if cfg.mode == "per_group":
+        return jnp.asarray(a.s, jnp.float32).reshape(-1), cfg.group_size
+    return jnp.asarray(a.s, jnp.float32).reshape(-1), k
 
 
 def path_tag(path) -> str:

@@ -363,6 +363,16 @@ def qlinear(x: jax.Array, wt: QT, cfg: QuantConfig) -> jax.Array:
         a = None
     if isinstance(a, ActScale):
         return _qmm_delayed(cfg, x, wt, a)
+    if a is not None:
+        # quant-health tap (repro.obs.quant_health, REPRO_QUANT_HEALTH=1
+        # only — a TaggedScale never exists otherwise): record this
+        # site's saturation/underflow/drift stats, then run the same
+        # delayed forward the bare ActScale takes
+        from repro.obs.quant_health import QH, TaggedScale
+
+        if isinstance(a, TaggedScale):
+            QH.record(a.tag, x, a.scale, cfg)
+            return _qmm_delayed(cfg, x, wt, a.scale)
     s = wt.s
     if s is None:
         # no predicted scale available → behave like jit scaling

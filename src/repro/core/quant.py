@@ -27,6 +27,7 @@ from .formats import (
     cast_fp8,
     e8m0_decode,
     e8m0_encode,
+    fp8_dtype,
     fp8_max,
 )
 
@@ -228,6 +229,39 @@ def quant_mx_delayed(x: jax.Array, global_scale: jax.Array,
     q = cast_fp8(jnp.where(denom > 0, xg / jnp.where(denom > 0, denom, 1.0),
                            0.0), fmt).reshape(x.shape)
     return MxQ(q=q, sexp=sexp, s=s)
+
+
+def quant_excursions(x_abs: jax.Array, scale: jax.Array,
+                     fmt: FP8Format = "e4m3"):
+    """Out-of-range accounting for a saturating fp8 cast of
+    ``x_abs / scale`` (the quant-health tap — docs/observability.md):
+
+      saturated   elements whose magnitude exceeds ``scale · FP8_MAX``
+                  (the cast clamps them to ±FP8_MAX)
+      underflowed nonzero elements the cast rounds to exactly 0
+      nonzero     the underflow denominator
+
+    ``x_abs`` is |x| (any shape), ``scale`` broadcasts against it; a
+    non-positive scale quantizes its group to 0, matching the
+    zero-denominator guard in ``quant_mx``/``quant_mx_delayed``.
+    Returns f32 count scalars.  Nothing here feeds the GEMM — no new
+    quantization reductions appear in a graph that calls this.
+
+    Underflow is detected by threshold, not by materializing the cast:
+    round-to-nearest-even sends ``v`` to 0 exactly when
+    ``v <= smallest_subnormal / 2`` (the tie goes to 0, the even
+    side), so ``x <= scale · tie`` is the same predicate one compare
+    cheaper — the tap rides every health-sampled serving step and
+    must stay a handful of element-wise ops."""
+    fmax = fp8_max(fmt)
+    tie = float(jnp.finfo(fp8_dtype(fmt)).smallest_subnormal) / 2.0
+    xf = x_abs.astype(jnp.float32)
+    pos = scale > 0
+    sat = jnp.sum(((xf > scale * fmax) & pos).astype(jnp.float32))
+    nonzero = xf > 0
+    under = jnp.sum((nonzero & ((xf <= scale * tie) | ~pos))
+                    .astype(jnp.float32))
+    return sat, under, jnp.sum(nonzero.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -178,6 +178,37 @@ def spec_decode() -> bool:
     return os.environ.get("REPRO_SPEC_DECODE", "0").strip() == "1"
 
 
+# Observability (see repro.obs and docs/observability.md).  Both
+# gates default OFF, and off is FREE: the serving step functions are
+# built without any telemetry code paths, so the decode/verify jaxprs
+# stay byte-identical to an obs-free build (tests/test_obs.py).
+def quant_health() -> bool:
+    """Whether serving steps additionally return per-site fp8
+    quantization-health statistics (saturation / underflow / ActScale
+    drift — repro.obs.quant_health).  Opt-in: REPRO_QUANT_HEALTH=1."""
+    return os.environ.get("REPRO_QUANT_HEALTH", "0").strip() == "1"
+
+
+def quant_health_every() -> int:
+    """REPRO_QUANT_HEALTH_EVERY: sample the health-instrumented step
+    variant every Nth engine step call (default 16, min 1).  The other
+    steps run the plain graphs, bounding telemetry overhead to
+    ~cost/N; drift moves over thousands of steps, so sparse sampling
+    loses no signal."""
+    env = os.environ.get("REPRO_QUANT_HEALTH_EVERY", "").strip()
+    try:
+        return max(1, int(env)) if env else 16
+    except ValueError:
+        return 16
+
+
+def trace_path() -> str | None:
+    """REPRO_TRACE: the Chrome-trace output path, or None (tracing
+    off).  Read once by ``repro.obs.trace.get_tracer``."""
+    env = os.environ.get("REPRO_TRACE", "").strip()
+    return env or None
+
+
 # Decode-attention path (see repro.models.attention._decode_attention
 # and repro.kernels.dispatch.decode_attention):
 #   "kernel" — route through the kernel dispatch: the fused Pallas

@@ -163,7 +163,20 @@ def main():
     ap.add_argument("--legacy", action="store_true",
                     help="force the legacy contiguous-ring Server "
                          "(same as REPRO_SERVE_PAGED=0)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the metrics-registry snapshot as JSON "
+                         "at exit (docs/observability.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record engine step spans and write the "
+                         "Chrome-trace JSON at exit (same as "
+                         "REPRO_TRACE=PATH)")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import get_tracer
+
+        tracer = get_tracer().enable(path=args.trace_out)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     defs = model_defs(cfg)
@@ -192,6 +205,19 @@ def main():
                         page_size=args.page_size,
                         num_pages=args.num_pages)
         engine.run(reqs)
+        s = engine.stats()       # publishes engine/sched registry rows
+        qh = s.get("quant_health")
+        if qh is not None:
+            print(f"quant health: {len(qh['sites'])} sites, "
+                  f"refresh_recommended={qh['refresh_recommended']}")
+    if tracer is not None:
+        print(f"trace: {tracer.save()} ({len(tracer)} events)")
+    if args.metrics_out:
+        from repro.obs.metrics import get_registry
+
+        with open(args.metrics_out, "w") as f:
+            f.write(get_registry().to_json(indent=2))
+        print(f"metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.core.formats import QuantConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.distributed.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
+from repro.obs.trace import span, trace_enabled
 from repro.train.steps import TrainHParams, init_train_state, make_train_step
 
 _PREEMPTED = False
@@ -75,13 +76,20 @@ def train(arch: str, *, smoke: bool = True, steps: int = 100,
         t0 = time.time()
         tokens_done = 0
         for step in range(start_step, steps):
-            b = data.batch_for_step(step, mesh)
-            if cfg.input_mode == "embeddings":
-                # modality-frontend stub: embed tokens with a fixed
-                # random projection (precomputed frame/patch embeddings)
-                b = dict(b)
-                b["embeds"] = _stub_embeds(cfg, b["tokens"])
-            state, metrics = jitted(state, b)
+            with span("train.data", step=step):
+                b = data.batch_for_step(step, mesh)
+                if cfg.input_mode == "embeddings":
+                    # modality-frontend stub: embed tokens with a fixed
+                    # random projection (precomputed frame/patch
+                    # embeddings)
+                    b = dict(b)
+                    b["embeds"] = _stub_embeds(cfg, b["tokens"])
+            with span("train.step", step=step):
+                state, metrics = jitted(state, b)
+                # spans wrap host wall time; blocking on the loss makes
+                # the span end-to-end instead of measuring dispatch
+                if trace_enabled():
+                    jax.block_until_ready(metrics["loss"])
             tokens_done += batch * seq
             if (step + 1) % log_every == 0 or step + 1 == steps:
                 loss = float(metrics["loss"])

@@ -362,6 +362,19 @@ def init_paged_pools(cfg, max_len: int, num_pages: int,
     return caches
 
 
+def _qh_drain():
+    # quant-health ys hook: None (the slot's historical value) unless a
+    # collection window is open — see repro.obs.quant_health.
+    from repro.obs.quant_health import QH
+    return QH.drain_layer()
+
+
+def _qh_stash(tree) -> None:
+    if tree:
+        from repro.obs.quant_health import QH
+        QH.stash_stacked(tree)
+
+
 def forward(cfg, qcfg: QuantConfig, params, batch: dict,
             caches=None, mode: str = "train"):
     """Returns (logits, new_caches, aux_loss).
@@ -414,6 +427,10 @@ def forward(cfg, qcfg: QuantConfig, params, batch: dict,
             # serving: the stacked cache rides in the CARRY (not xs/ys)
             # so the while loop aliases it in place — one copy of the
             # multi-GB KV cache instead of separate in/out stacks.
+            # The ys slot carries the quant-health stats when a
+            # collection window is open (stacked to (layers, ...) by
+            # scan itself) and stays None — the jaxpr it always had —
+            # otherwise (repro.obs.quant_health).
             def body(carry, p_l, seg=seg):
                 x_, aux_, c_stack, li = carry
                 c_l = jax.tree.map(
@@ -424,11 +441,12 @@ def forward(cfg, qcfg: QuantConfig, params, batch: dict,
                 c_stack = jax.tree.map(
                     lambda c, u: jax.lax.dynamic_update_index_in_dim(
                         c, u.astype(c.dtype), li, 0), c_stack, c_new)
-                return (x_, aux_ + aux_l, c_stack, li + 1), None
+                return (x_, aux_ + aux_l, c_stack, li + 1), _qh_drain()
 
-            (x, aux_total, c_seg, _), _ = jax.lax.scan(
+            (x, aux_total, c_seg, _), hs = jax.lax.scan(
                 body, (x, aux_total, c_seg, jnp.zeros((), jnp.int32)),
                 p_seg, length=seg.n)
+            _qh_stash(hs)
             new_caches[seg.name] = c_seg
 
     x = apply_norm(cfg, params["final_norm"], x)

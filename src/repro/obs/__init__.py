@@ -1,0 +1,27 @@
+"""Unified observability layer (docs/observability.md).
+
+Three independent pillars, all free when off:
+
+  - ``obs.metrics``      process-wide metrics registry (counters,
+                         gauges, histograms) + Prometheus-text / JSON
+                         exporters — the single export surface for the
+                         scattered serving stats (``Scheduler.summary``,
+                         ``Engine.stats``, ``PageAllocator`` counters);
+  - ``obs.trace``        span API emitting Chrome-trace-event JSON
+                         (Perfetto-viewable), ring-buffered, env-gated
+                         by ``REPRO_TRACE=path``;
+  - ``obs.quant_health`` fp8 quantization-health telemetry
+                         (saturation / underflow / ActScale drift per
+                         GEMM site), env-gated by
+                         ``REPRO_QUANT_HEALTH=1``.
+
+The hard contract: with both gates off, the serving jaxprs are
+byte-identical to an obs-free build and contain zero quantization
+reductions (tests/test_obs.py asserts this via ``core.introspect``).
+"""
+
+from .metrics import Registry, get_registry
+from .trace import get_tracer, span, trace_enabled
+
+__all__ = ["Registry", "get_registry", "get_tracer", "span",
+           "trace_enabled"]

@@ -1,0 +1,311 @@
+"""fp8 quantization-health telemetry (docs/observability.md).
+
+MOSS's delayed/predicted scaling removed the per-step amax reductions
+— and with them the only signal that would say when quantization goes
+wrong.  Under ``REPRO_QUANT_HEALTH=1`` every delayed-activation GEMM
+site reports, per engine step and per ``path_tag`` site key:
+
+  - **saturation rate**   fraction of elements whose post-scale
+                          magnitude exceeds the fp8 max (they clip at
+                          ±448 for e4m3);
+  - **underflow rate**    fraction of *nonzero* inputs that quantize
+                          to exactly 0;
+  - **drift ratio**       max over quantization groups of
+                          ``live_amax_g / (scale_g · FP8_MAX)`` — the
+                          live activation range relative to the edge
+                          of the calibrated representable range.  The
+                          calibration margin (default 1.25) means a
+                          healthy site sits near ``1/margin`` ≈ 0.8; a
+                          ratio above 1.0 means the live amax exceeds
+                          calibrated × margin and values are clipping
+                          → ``refresh_recommended`` flips on and
+                          ``Engine.refresh_act_scales()`` is the fix.
+
+Mechanics — and why telemetry off is FREE:
+
+  - at step **build** time (``make_*_step``), and only when the flag
+    is on, each site's ``ActScale`` is wrapped in a ``TaggedScale``
+    carrying its site tag;
+  - ``qlinear`` computes the site stats (pure element-wise compares +
+    tiny reductions over the activation — no extra quant reductions:
+    nothing here feeds an fp8 cast) and records the tracers into the
+    module collector ``QH``;
+  - ``transformer.forward``'s scan-over-layers body drains the
+    collector each layer into the scan's ``ys`` slot, so per-site
+    stats come out stacked ``(layers, ...)`` exactly like the
+    ``ActScale``s ride in;
+  - the step function returns the collected tree as an extra output
+    and the engine feeds it to a host-side ``HealthAggregator`` that
+    publishes registry histograms.
+
+  With the flag off none of this exists: ``qlinear`` sees a plain
+  ``ActScale``, the scan body's drain returns ``None`` (the ``ys``
+  slot it always had), and the step returns its usual 2-tuple — the
+  decode/verify jaxprs are byte-identical to an obs-free build
+  (tests/test_obs.py).
+
+Limitation: sites evaluated under ``jax.vmap`` (the per-expert MoE
+FFN on the decode path) are skipped — their stats are vmap-trace
+local and cannot escape through the layer scan.  Dense, attention and
+head sites (the vast majority of GEMM traffic) are all covered.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actscale import ActScale, effective_group_scales
+from repro.core.formats import TINY, fp8_max
+from repro.core.quant import quant_excursions
+
+from .metrics import DRIFT_BUCKETS, RATE_BUCKETS, get_registry
+
+DRIFT_THRESHOLD = 1.0      # live amax past calibrated × margin
+
+
+def quant_health_enabled() -> bool:
+    from repro.core.runtime_flags import quant_health
+
+    return quant_health()
+
+
+# ---------------------------------------------------------------------------
+# TaggedScale: ActScale + site identity, attachable as QT.a
+# ---------------------------------------------------------------------------
+
+
+class TaggedScale:
+    """An ``ActScale`` bundled with its ``path_tag`` site key — what
+    ``_wrap_serve`` attaches instead of the bare ``ActScale`` when
+    quant-health is on.  Registered as a pytree with the tag static,
+    so ``lax.scan`` slices the scale arrays per layer while the tag
+    rides along untouched."""
+
+    __slots__ = ("tag", "scale")
+
+    def __init__(self, tag: str, scale: ActScale):
+        self.tag = tag
+        self.scale = scale
+
+    def __repr__(self):
+        return f"TaggedScale({self.tag!r})"
+
+
+jax.tree_util.register_pytree_node(
+    TaggedScale,
+    lambda t: ((t.scale,), t.tag),
+    lambda tag, children: TaggedScale(tag, children[0]),
+)
+
+
+def tag_act_scales(act: dict | None) -> dict | None:
+    """{tag: ActScale} -> {tag: TaggedScale} (build-time, flag on)."""
+    if act is None:
+        return None
+    return {tag: TaggedScale(tag, a) for tag, a in act.items()}
+
+
+# ---------------------------------------------------------------------------
+# In-graph site statistics
+# ---------------------------------------------------------------------------
+
+
+def site_stats(x: jax.Array, a: ActScale, cfg) -> dict[str, jax.Array]:
+    """Quantization-health statistics for one GEMM site's activation
+    ``x`` (inner dim last) against its calibrated ``ActScale``.
+
+    Pure element-wise compares plus small reductions over ``x`` — no
+    value here ever feeds an fp8 cast, so
+    ``core.introspect.count_quant_reductions`` stays 0 even with
+    telemetry on.  Returns f32 scalars (counts/max) that stack to
+    ``(layers,)`` through the forward's scan."""
+    fmax = float(fp8_max(cfg.fwd_format))
+    k = x.shape[-1]
+    x2d = jnp.abs(x.astype(jnp.float32).reshape(-1, k))
+    sg, g = effective_group_scales(a, cfg, k)
+    pad = (-k) % g
+    if pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, pad)))
+    xg = x2d.reshape(x2d.shape[0], -1, g)
+    sat, under, nonzero = quant_excursions(xg, sg[None, :, None],
+                                           cfg.fwd_format)
+    # per-group live amax first, then the (tiny) per-group ratios —
+    # same max as a full-size ratio array at a fraction of the work
+    ag = jnp.max(xg, axis=(0, 2))
+    return {
+        "n": jnp.float32(x2d.shape[0] * k),     # real (unpadded) count
+        "sat": sat,
+        "underflow": under,
+        "nonzero": nonzero,
+        "amax": jnp.max(ag),
+        "drift": jnp.max(ag / jnp.maximum(sg, TINY)) / fmax,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Trace-time collector
+# ---------------------------------------------------------------------------
+
+
+def _under_vmap(x) -> bool:
+    """True when ``x`` is a vmap batch tracer — its stats could not
+    escape through the layer scan (see module docstring)."""
+    try:
+        from jax.interpreters.batching import BatchTracer
+
+        return isinstance(x, BatchTracer)
+    except ImportError:                       # pragma: no cover
+        return type(x).__name__ == "BatchTracer"
+
+
+class _Capture:
+    """Result box for one ``QH.capture()`` window."""
+
+    def __init__(self):
+        self.tree: dict[str, dict] = {}
+
+
+class _Collector:
+    """Module-level tap sink: ``qlinear`` records tracer stats here
+    while a health-enabled step function is being traced, the layer
+    scan drains per layer, and the step function collects the merged
+    tree as an extra output.  ``tracing`` is False outside a capture
+    window, making every tap a no-op."""
+
+    def __init__(self):
+        self.tracing = False
+        self._sink: dict[str, dict] = {}
+        self._stacked: dict[str, dict] = {}
+
+    def record(self, tag: str, x, a: ActScale, cfg) -> None:
+        if not self.tracing or _under_vmap(x):
+            return
+        self._sink[tag] = site_stats(x, a, cfg)
+
+    def drain_layer(self) -> dict | None:
+        """Called by the forward's scan body: this layer's recorded
+        stats become the scan's per-iteration ``ys`` output (stacked
+        over layers by scan itself).  Returns None — the slot's
+        historical value, leaving the jaxpr untouched — when no
+        capture window is open or nothing was recorded."""
+        if not self.tracing or not self._sink:
+            return None
+        out, self._sink = self._sink, {}
+        return out
+
+    def stash_stacked(self, tree) -> None:
+        """Called by the forward after a scan: adopt the (layers, ...)
+        stacked ys tree."""
+        if tree:
+            self._stacked.update(tree)
+
+    @contextlib.contextmanager
+    def capture(self):
+        """Open a collection window around a forward call (inside the
+        step function being traced).  Yields a ``_Capture`` whose
+        ``tree`` is the flat ``{site tag: {stat: array}}`` dict after
+        the window closes — scan-stacked sites carry a leading
+        ``(layers,)`` dim, top-level sites (the LM head) are scalars."""
+        prev = (self.tracing, self._sink, self._stacked)
+        self.tracing, self._sink, self._stacked = True, {}, {}
+        cap = _Capture()
+        try:
+            yield cap
+        finally:
+            cap.tree = dict(self._stacked)
+            cap.tree.update(self._sink)       # top-level (unscanned)
+            self.tracing, self._sink, self._stacked = prev
+
+
+QH = _Collector()
+
+
+# ---------------------------------------------------------------------------
+# Host-side aggregation -> registry
+# ---------------------------------------------------------------------------
+
+
+class HealthAggregator:
+    """Consumes the per-step health trees the engine pulls off device
+    and publishes them: per-site saturation/underflow-rate and
+    drift-ratio histograms in the metrics registry, plus the
+    ``refresh_recommended`` flag once any site's drift exceeds the
+    threshold (live amax beyond calibrated × margin)."""
+
+    def __init__(self, registry=None,
+                 drift_threshold: float = DRIFT_THRESHOLD):
+        self.reg = registry or get_registry()
+        self.drift_threshold = float(drift_threshold)
+        self.sites: dict[str, dict] = {}
+        self.steps = 0
+        self.refresh_recommended = False
+        self._h_sat = self.reg.histogram(
+            "quant_health_saturation_rate", buckets=RATE_BUCKETS,
+            help="per-site fraction of activations clipping at fp8 max")
+        self._h_under = self.reg.histogram(
+            "quant_health_underflow_rate", buckets=RATE_BUCKETS,
+            help="per-site fraction of nonzero activations quantizing "
+                 "to 0")
+        self._h_drift = self.reg.histogram(
+            "quant_health_drift_ratio", buckets=DRIFT_BUCKETS,
+            help="per-site live-amax / calibrated-range ratio "
+                 "(>1 = clipping)")
+        self._g_flag = self.reg.gauge(
+            "quant_health_refresh_recommended",
+            help="1 once any site's drift ratio exceeded the "
+                 "threshold — call Engine.refresh_act_scales()")
+        self._g_flag.set(0.0)
+
+    def ingest(self, tree: dict[str, dict[str, Any]]) -> None:
+        """One step's ``{site tag: stats}`` tree (device arrays or
+        numpy).  Counts are summed over the stacked layer dim, drift
+        is maxed — a single bad layer should trip the flag."""
+        if not tree:
+            return
+        tree = jax.device_get(tree)
+        self.steps += 1
+        for tag, st in tree.items():
+            n = float(np.sum(st["n"]))
+            sat = float(np.sum(st["sat"]))
+            nonzero = float(np.sum(st["nonzero"]))
+            under = float(np.sum(st["underflow"]))
+            amax = float(np.max(st["amax"]))
+            drift = float(np.max(st["drift"]))
+            sat_rate = sat / max(n, 1.0)
+            under_rate = under / max(nonzero, 1.0)
+            lab = {"site": tag}
+            self._h_sat.observe(sat_rate, labels=lab)
+            self._h_under.observe(under_rate, labels=lab)
+            self._h_drift.observe(drift, labels=lab)
+            s = self.sites.setdefault(tag, {
+                "n": 0.0, "sat": 0.0, "nonzero": 0.0, "underflow": 0.0,
+                "amax": 0.0, "drift_max": 0.0, "steps": 0})
+            s["n"] += n
+            s["sat"] += sat
+            s["nonzero"] += nonzero
+            s["underflow"] += under
+            s["amax"] = max(s["amax"], amax)
+            s["drift_max"] = max(s["drift_max"], drift)
+            s["steps"] += 1
+            if drift > self.drift_threshold:
+                self.refresh_recommended = True
+                self._g_flag.set(1.0)
+
+    def report(self) -> dict:
+        """Per-site summary rates (for ``Engine.stats()`` / tests)."""
+        out = {}
+        for tag, s in self.sites.items():
+            out[tag] = {
+                "saturation_rate": s["sat"] / max(s["n"], 1.0),
+                "underflow_rate": s["underflow"] / max(s["nonzero"],
+                                                       1.0),
+                "drift_max": s["drift_max"],
+                "amax": s["amax"],
+                "steps": s["steps"],
+            }
+        return out

@@ -80,6 +80,8 @@ from repro.core.actscale import calibrate_act_scales
 from repro.core.runtime_flags import (
     chunked_prefill,
     paged_placement,
+    quant_health,
+    quant_health_every,
     serve_delayed_act,
     serve_preemption,
     serve_prefix_cache,
@@ -100,6 +102,9 @@ from repro.train.steps import (
     prequantize_params,
     serve_weight_scales,
 )
+
+from repro.obs.metrics import get_registry
+from repro.obs.trace import instant, span
 
 from .paged_cache import (
     PAGE_SIZE,
@@ -269,6 +274,30 @@ class Engine:
         self.requests: dict[int, Request] = {}
 
     def _build_steps(self):
+        # quant-health telemetry (docs/observability.md): resolved at
+        # BUILD time so the off path's step graphs carry zero telemetry
+        # code — the decode/verify jaxprs stay byte-identical to a
+        # health-free build (tests/test_obs.py).  Needs the delayed
+        # activation scales: the health stats measure drift AGAINST
+        # them.  With health on the engine carries BOTH step variants
+        # and runs the instrumented one every Nth call
+        # (REPRO_QUANT_HEALTH_EVERY, default 16) — drift moves over
+        # thousands of steps, so sparse sampling keeps the signal
+        # while the hot loop runs the plain (telemetry-free) graphs.
+        self.health = quant_health() and self.act_scales is not None
+        self.health_every = quant_health_every() if self.health else 0
+        # per-(step kind, token shape) countdowns: the FIRST call of
+        # every distinct signature samples health, so a warmup pass
+        # compiles every instrumented variant it will ever need and
+        # steady state never jit-stalls mid-serving; short runs and
+        # post-refresh rebuilds still report.
+        self._health_countdown: dict = {}
+        if self.health and getattr(self, "qh", None) is None:
+            from repro.obs.quant_health import HealthAggregator
+
+            self.qh = HealthAggregator()
+        elif not self.health:
+            self.qh = None
         self.prefill = jax.jit(
             make_prefill_step(self.cfg, self.max_len,
                               scales=self.scales,
@@ -284,6 +313,59 @@ class Engine:
             make_verify_step(self.cfg, scales=self.scales,
                              act_scales=self.act_scales),
             donate_argnums=(1,))
+        if self.health:
+            self.prefill_h = jax.jit(
+                make_prefill_step(self.cfg, self.max_len,
+                                  scales=self.scales,
+                                  act_scales=self.act_scales,
+                                  quant_health=True))
+            self.decode_h = jax.jit(
+                make_decode_step(self.cfg, scales=self.scales,
+                                 act_scales=self.act_scales,
+                                 quant_health=True),
+                donate_argnums=(1,))
+            self.verify_h = jax.jit(
+                make_verify_step(self.cfg, scales=self.scales,
+                                 act_scales=self.act_scales,
+                                 quant_health=True),
+                donate_argnums=(1,))
+
+    # -- quant-health step-call shims ----------------------------------
+    # Health OFF: the plain steps, exactly the historical 2-tuples.
+    # Health ON: every Nth call runs the instrumented variant, whose
+    # third output (the per-site stats tree) feeds the host-side
+    # aggregator.
+    def _health_due(self, kind: str, shape) -> bool:
+        if not self.health:
+            return False
+        key = (kind, tuple(shape))
+        cd = self._health_countdown.get(key)
+        if cd is None or cd <= 0:
+            self._health_countdown[key] = self.health_every
+            return True
+        self._health_countdown[key] = cd - 1
+        return False
+
+    def _run_prefill(self, *a):
+        if self._health_due("prefill", a[1]["tokens"].shape):
+            logits, caches, qh = self.prefill_h(*a)
+            self.qh.ingest(qh)
+            return logits, caches
+        return self.prefill(*a)
+
+    def _run_decode(self, *a):
+        if self._health_due("decode", a[2].shape):
+            logits, caches, qh = self.decode_h(*a)
+            self.qh.ingest(qh)
+            return logits, caches
+        return self.decode(*a)
+
+    def _run_verify(self, *a):
+        if self._health_due("verify", a[2].shape):
+            logits, caches, qh = self.verify_h(*a)
+            self.qh.ingest(qh)
+            return logits, caches
+        return self.verify(*a)
 
     def refresh_act_scales(self, tokens=None, margin=None):
         """Re-calibrate the delayed activation scales (optionally on
@@ -359,19 +441,31 @@ class Engine:
 
     # -- the engine step -----------------------------------------------
     def step(self) -> None:
-        if not self.chunked:
-            self._retire_and_refill()
-            self._admit_new_rows()
-            self._decode_once()
-            return
-        self._retire()
-        self._swap_in_preempted()
-        self._chunk_phase()
-        self._retire()          # an attached request may finish
-        if self.spec:           # instantly (max_new == 1 / EOS)
-            self._verify_once()
-        else:
-            self._decode_once()
+        # spans wrap the HOST-side phases (repro.obs.trace) — never
+        # anything inside a jitted graph, so REPRO_TRACE can never
+        # change a jaxpr
+        with span("engine.step", rows=len(self.kv.rows)):
+            if not self.chunked:
+                with span("retire_refill"):
+                    self._retire_and_refill()
+                    self._admit_new_rows()
+                with span("decode", rows=len(self.kv.rows)):
+                    self._decode_once()
+                return
+            with span("retire"):
+                self._retire()
+            with span("swap_in", preempted=len(self._preempted)):
+                self._swap_in_preempted()
+            with span("chunk_phase"):
+                self._chunk_phase()
+            with span("retire"):
+                self._retire()  # an attached request may finish
+            if self.spec:       # instantly (max_new == 1 / EOS)
+                with span("verify", rows=len(self.kv.rows)):
+                    self._verify_once()
+            else:
+                with span("decode", rows=len(self.kv.rows)):
+                    self._decode_once()
 
     # -- v2: retirement ------------------------------------------------
     def _retire(self):
@@ -416,6 +510,7 @@ class Engine:
         victim.state = RequestState.PREEMPTED
         self._preempted.append((victim, bundle))
         self.preemptions += 1
+        instant("preempt", rid=victim.rid, depth=bundle["depth"])
         return True
 
     def _grow_or_preempt(self, grow) -> None:
@@ -499,7 +594,7 @@ class Engine:
                 lambda: self.kv.stage_ensure(req.rid, st.pos,
                                              st.pos + n_real))
             self.kv.stage_stamp(req.rid, st.pos)
-            logits, self.kv.caches = self.decode(
+            logits, self.kv.caches = self._run_decode(
                 self.params, self.kv.caches, jnp.asarray(toks))
         else:
             # identity placement: the chunk runs on a detached one-row
@@ -510,7 +605,7 @@ class Engine:
                         idx=jnp.full_like(n.idx, st.pos)))
                 if seg is not None else None
                 for name, seg in st.row_cache.items()}
-            logits, st.row_cache = self.decode(
+            logits, st.row_cache = self._run_decode(
                 self.params, st.row_cache, jnp.asarray(toks))
         self.chunk_prefill_steps += 1
         st.pos += n_real
@@ -548,7 +643,7 @@ class Engine:
         n = req.prompt_len
         toks = np.zeros((1, self._bucket_len(n)), np.int32)
         toks[0, :n] = req.prompt
-        logits, one = self.prefill(self.params, {"tokens":
+        logits, one = self._run_prefill(self.params, {"tokens":
                                                  jnp.asarray(toks)},
                                    jnp.int32(min(n, toks.shape[1]) - 1))
         self.prefill_calls += 1
@@ -618,7 +713,7 @@ class Engine:
         feed = np.zeros((len(rows), 1), np.int32)
         for i, rid in enumerate(rows):
             feed[i, 0] = self.requests[rid].out[-1]
-        logits, self.kv.caches = self.decode(
+        logits, self.kv.caches = self._run_decode(
             self.params, self.kv.caches, jnp.asarray(feed))
         self.kv.advance()
         nxt = np.asarray(greedy_sample(logits))
@@ -672,7 +767,7 @@ class Engine:
             # CoW barrier + restamp over the FULL k-token write window
             self._grow_or_preempt(
                 lambda: self.kv.prepare_decode(write_tokens=k))
-        logits, self.kv.caches = self.verify(
+        logits, self.kv.caches = self._run_verify(
             self.params, self.kv.caches, jnp.asarray(feed))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))      # (B, k)
         advs, accepted = [], 0
@@ -758,6 +853,7 @@ class Engine:
 
     def stats(self) -> dict:
         s = self.sched.summary()
+        al = self.kv.allocator
         s.update({
             "prefill_calls": self.prefill_calls,
             "chunk_prefill_steps": self.chunk_prefill_steps,
@@ -768,9 +864,33 @@ class Engine:
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "pages_shared": self.pages_shared,
             "cow_copies": getattr(self.kv, "cow_copies", 0),
-            "peak_pool_pages": self.kv.allocator.peak_used,
+            "page_evictions": al.evictions,
+            "peak_pool_pages": al.peak_used,
         })
+        if self.qh is not None:
+            s["quant_health"] = {
+                "refresh_recommended": self.qh.refresh_recommended,
+                "sites": self.qh.report(),
+            }
+        self._publish_metrics(s, al)
         return s
+
+    def _publish_metrics(self, s: dict, al) -> None:
+        """Mirror the engine/allocator stats into the process-wide
+        metrics registry (repro.obs.metrics) — ``set_total`` adopts
+        the running python counters without double counting, so
+        ``stats()`` can be called any number of times."""
+        reg = get_registry()
+        for name in ("prefill_calls", "chunk_prefill_steps",
+                     "chunked_requests", "preemptions", "swap_ins",
+                     "prefix_hits", "prefill_tokens_skipped",
+                     "pages_shared", "cow_copies", "page_evictions"):
+            reg.counter(f"engine_{name}_total").set_total(float(s[name]))
+        reg.gauge("pages_total").set(float(al.num_pages))
+        reg.gauge("pages_in_use").set(float(al.num_pages - al.free_pages))
+        reg.gauge("pages_cached").set(float(al.cached_pages))
+        reg.gauge("pages_peak_used").set(float(al.peak_used))
+        reg.gauge("engine_resident_rows").set(float(len(self.kv.rows)))
 
     def prune_finished(self) -> int:
         """Drop finished requests from the engine's history.  A

@@ -173,6 +173,8 @@ class PageAllocator:
         # but not yet materialized — the admission headroom term
         self._outstanding = 0
         self.peak_used = 0
+        # hashed refcount-0 pages reclaimed (prefix entries dropped)
+        self.evictions = 0
 
     # -- introspection -------------------------------------------------
     @property
@@ -260,6 +262,7 @@ class PageAllocator:
             # prefix entry dies with it
             page, _ = self._evictable.popitem(last=False)
             self._drop_hash(page)
+            self.evictions += 1
         else:
             raise PageExhausted("page pool empty")
         self._refcount[page] = 1

@@ -152,7 +152,26 @@ class Scheduler:
         req.t_last = now
         if hit_stop(req, token):
             req.state = RequestState.FINISHED
+            self._observe_finished(req)
         return req.done
+
+    def _observe_finished(self, req: Request) -> None:
+        """One-shot per-request latency histogram observations
+        (repro.obs.metrics) — at FINISH, so repeated ``summary()``
+        calls never double count."""
+        from repro.obs.metrics import LATENCY_BUCKETS_S, get_registry
+
+        reg = get_registry()
+        if req.ttft is not None:
+            reg.histogram("sched_ttft_seconds",
+                          buckets=LATENCY_BUCKETS_S,
+                          help="per-request time to first token"
+                          ).observe(req.ttft)
+        if req.tpot is not None:
+            reg.histogram("sched_tpot_seconds",
+                          buckets=LATENCY_BUCKETS_S,
+                          help="per-request mean time per output token"
+                          ).observe(req.tpot)
 
     def on_verify(self, proposed: int, accepted: int) -> None:
         """Record one speculative verify step: ``proposed`` draft
@@ -219,7 +238,13 @@ class Scheduler:
     def summary(self) -> dict:
         """Aggregate serving metrics over every finished request.
         p50/p99 percentiles ride alongside the means — heavy-traffic
-        scheduling is judged on tails, not averages."""
+        scheduling is judged on tails, not averages.
+
+        Undefined aggregates (no finished requests, no drafted tokens)
+        are ``None``, never NaN: the dict must stay valid JSON through
+        ``json.dump`` / the metrics registry (docs/observability.md).
+        The registry mirror lives in ``repro.obs.metrics`` under
+        ``sched_*`` gauges/counters."""
         done = [r for r in self.all if r.done]
         toks = sum(len(r.out) for r in done)
         ttfts = [r.ttft for r in done if r.ttft is not None]
@@ -228,14 +253,14 @@ class Scheduler:
                 - min((r.t_submit for r in done), default=0.0))
 
         def pct(xs, q):
-            return float(np.percentile(xs, q)) if xs else float("nan")
+            return float(np.percentile(xs, q)) if xs else None
 
-        return {
+        s = {
             "requests": len(done),
             "tokens": toks,
-            "tok_per_s": toks / span if span > 0 else float("nan"),
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
-            "mean_tpot_s": float(np.mean(tpots)) if tpots else float("nan"),
+            "tok_per_s": toks / span if span > 0 else None,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "mean_tpot_s": float(np.mean(tpots)) if tpots else None,
             "p50_ttft_s": pct(ttfts, 50),
             "p99_ttft_s": pct(ttfts, 99),
             "p50_tpot_s": pct(tpots, 50),
@@ -247,5 +272,25 @@ class Scheduler:
             "spec_drafted": self.drafted,
             "spec_accepted": self.accepted,
             "spec_accept_rate": (self.accepted / self.drafted
-                                 if self.drafted else float("nan")),
+                                 if self.drafted else None),
         }
+        self._publish(s)
+        return s
+
+    def _publish(self, s: dict) -> None:
+        from repro.obs.metrics import get_registry
+
+        reg = get_registry()
+        reg.counter("sched_requests_finished_total").set_total(
+            float(s["requests"]))
+        reg.counter("sched_tokens_generated_total").set_total(
+            float(s["tokens"]))
+        reg.counter("sched_spec_drafted_total").set_total(
+            float(s["spec_drafted"]))
+        reg.counter("sched_spec_accepted_total").set_total(
+            float(s["spec_accepted"]))
+        for key in ("tok_per_s", "mean_ttft_s", "mean_tpot_s",
+                    "p50_ttft_s", "p99_ttft_s", "p50_tpot_s",
+                    "p99_tpot_s", "spec_accept_rate"):
+            if s[key] is not None:
+                reg.gauge(f"sched_{key}").set(s[key])

@@ -359,7 +359,37 @@ def _wrap_serve(params, mask, scales, act=None):
     return wrap_qt(params, scales, mask)
 
 
-def make_prefill_step(cfg, max_len: int, scales=None, act_scales=None):
+def _health_act(act_scales, quant_health: bool):
+    """Build-time resolution of the quant-health tap (repro.obs.
+    quant_health): when the flag is on and delayed activation scales
+    exist, each site's ``ActScale`` is wrapped in a ``TaggedScale`` so
+    ``qlinear`` can report per-site stats.  Off (the default) returns
+    ``act_scales`` untouched — the step graphs are byte-identical to a
+    build without this feature."""
+    if quant_health and act_scales:
+        from repro.obs.quant_health import tag_act_scales
+
+        return tag_act_scales(act_scales), True
+    return act_scales, False
+
+
+def _forward_health(health: bool, cfg, qcfg, qp, batch, caches, mode):
+    """forward() plus, when health is on, the collected per-site stats
+    tree (None otherwise — and then this is exactly ``forward``)."""
+    if not health:
+        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
+                                    mode=mode)
+        return logits, caches, None
+    from repro.obs.quant_health import QH
+
+    with QH.capture() as cap:
+        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
+                                    mode=mode)
+    return logits, caches, cap.tree
+
+
+def make_prefill_step(cfg, max_len: int, scales=None, act_scales=None,
+                      quant_health: bool = False):
     """``scales`` (from ``serve_weight_scales``) threads pre-computed
     per-tensor weight scales through; None falls back to in-step (jit)
     scaling — the training-eval behavior.
@@ -374,26 +404,36 @@ def make_prefill_step(cfg, max_len: int, scales=None, act_scales=None):
 
     ``act_scales`` (from ``repro.core.actscale.calibrate_act_scales``)
     swaps in-graph activation amax reductions for the calibrated
-    delayed scales; None keeps just-in-time scaling."""
+    delayed scales; None keeps just-in-time scaling.
+
+    ``quant_health=True`` (REPRO_QUANT_HEALTH=1, engine-resolved)
+    additionally returns the per-site quantization-health stats tree
+    as a THIRD output — docs/observability.md."""
     mask = serve_quant_mask(cfg, scales)
     qcfg = cfg.quant
+    act, health = _health_act(act_scales, quant_health)
 
     def prefill_step(params, batch, last=None):
-        qp = _wrap_serve(params, mask, scales, act_scales)
+        qp = _wrap_serve(params, mask, scales, act)
         b = (batch["tokens"].shape[0] if "tokens" in batch
              else batch["embeds"].shape[0])
         caches = init_caches(cfg, b, max_len)
-        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
-                                    mode="prefill")
+        logits, caches, qh = _forward_health(health, cfg, qcfg, qp,
+                                             batch, caches, "prefill")
         if last is None:
-            return logits[:, -1:], caches
-        return jax.lax.dynamic_slice_in_dim(logits, last, 1,
-                                            axis=1), caches
+            logits = logits[:, -1:]
+        else:
+            logits = jax.lax.dynamic_slice_in_dim(logits, last, 1,
+                                                  axis=1)
+        if health:
+            return logits, caches, qh
+        return logits, caches
 
     return prefill_step
 
 
-def make_chunk_prefill_step(cfg, scales=None, act_scales=None):
+def make_chunk_prefill_step(cfg, scales=None, act_scales=None,
+                            quant_health: bool = False):
     """Chunked-prefill step — a documented alias of
     ``make_decode_step``.
 
@@ -406,26 +446,32 @@ def make_chunk_prefill_step(cfg, scales=None, act_scales=None):
     the already-resident pages via the block table plus an in-chunk
     causal mask.  ONE chunk shape replaces v1's per-16-token-bucket
     prefill compiles (docs/continuous-batching.md)."""
-    return make_decode_step(cfg, scales=scales, act_scales=act_scales)
+    return make_decode_step(cfg, scales=scales, act_scales=act_scales,
+                            quant_health=quant_health)
 
 
-def make_decode_step(cfg, scales=None, act_scales=None):
+def make_decode_step(cfg, scales=None, act_scales=None,
+                     quant_health: bool = False):
     mask = serve_quant_mask(cfg, scales)
     qcfg = cfg.quant
+    act, health = _health_act(act_scales, quant_health)
 
     def decode_step(params, caches, tokens):
         """tokens: (B, 1) int32 (or embeds (B,1,d)) -> next logits."""
-        qp = _wrap_serve(params, mask, scales, act_scales)
+        qp = _wrap_serve(params, mask, scales, act)
         batch = ({"embeds": tokens} if cfg.input_mode == "embeddings"
                  and tokens.ndim == 3 else {"tokens": tokens})
-        logits, caches, _ = forward(cfg, qcfg, qp, batch, caches,
-                                    mode="decode")
+        logits, caches, qh = _forward_health(health, cfg, qcfg, qp,
+                                             batch, caches, "decode")
+        if health:
+            return logits, caches, qh
         return logits, caches
 
     return decode_step
 
 
-def make_verify_step(cfg, scales=None, act_scales=None):
+def make_verify_step(cfg, scales=None, act_scales=None,
+                     quant_health: bool = False):
     """Speculative verify step (docs/speculative-decoding.md).
 
     The built step takes ``tokens (B, k)`` = [last committed token,
@@ -441,12 +487,16 @@ def make_verify_step(cfg, scales=None, act_scales=None):
     positions are simply never covered by ``n_valid`` again)."""
     mask = serve_quant_mask(cfg, scales)
     qcfg = cfg.quant
+    act, health = _health_act(act_scales, quant_health)
 
     def verify_step(params, caches, tokens):
         """tokens: (B, k) int32 -> ((B, k, V) logits, caches)."""
-        qp = _wrap_serve(params, mask, scales, act_scales)
-        logits, caches, _ = forward(cfg, qcfg, qp, {"tokens": tokens},
-                                    caches, mode="verify")
+        qp = _wrap_serve(params, mask, scales, act)
+        logits, caches, qh = _forward_health(health, cfg, qcfg, qp,
+                                             {"tokens": tokens}, caches,
+                                             "verify")
+        if health:
+            return logits, caches, qh
         return logits, caches
 
     return verify_step

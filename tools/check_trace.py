@@ -1,0 +1,120 @@
+"""Validate the observability artifacts the serving CLIs emit
+(docs/observability.md) — CI runs this over the smoke-serve outputs.
+
+  python tools/check_trace.py --trace trace.json --metrics metrics.json
+
+Trace file: a Chrome-trace-event JSON array (the format Perfetto /
+chrome://tracing load).  Checked per event: required keys, known
+phase, integer microsecond timestamps, non-negative durations on
+complete events.  The file must contain at least one ``engine.step``
+span when ``--require-span`` names are given.
+
+Metrics file: a ``Registry.snapshot()`` JSON dump.  Checked: valid
+strict JSON (``NaN``/``Infinity`` literals are rejected — the
+Scheduler.summary NaN regression this PR fixed), known metric kinds,
+histogram count == sum of bucket counts, and any ``--require-metric``
+names present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KINDS = {"counter", "gauge", "histogram"}
+PHASES = {"X", "i", "B", "E", "M"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_trace(path: str, require_spans: list[str]) -> int:
+    # strict: the JSON spec has no NaN/Infinity literals
+    text = open(path).read()
+    events = json.loads(text, parse_constant=lambda c: fail(
+        f"{path}: non-standard JSON constant {c!r}"))
+    if not isinstance(events, list):
+        fail(f"{path}: top level must be a JSON array of events")
+    if not events:
+        fail(f"{path}: empty trace — no spans were recorded")
+    names = set()
+    for i, ev in enumerate(events):
+        missing = {"name", "ph", "ts", "pid", "tid"} - set(ev)
+        if missing:
+            fail(f"{path}: event {i} missing keys {sorted(missing)}")
+        if ev["ph"] not in PHASES:
+            fail(f"{path}: event {i} unknown phase {ev['ph']!r}")
+        if not isinstance(ev["ts"], int) or ev["ts"] < 0:
+            fail(f"{path}: event {i} ts must be a non-negative int "
+                 f"(microseconds)")
+        if ev["ph"] == "X" and (not isinstance(ev.get("dur"), int)
+                                or ev["dur"] < 0):
+            fail(f"{path}: complete event {i} needs int dur >= 0")
+        names.add(ev["name"])
+    for want in require_spans:
+        if want not in names:
+            fail(f"{path}: required span {want!r} absent "
+                 f"(got {sorted(names)[:12]}...)")
+    print(f"check_trace: {path}: {len(events)} events, "
+          f"{len(names)} distinct span names OK")
+    return len(events)
+
+
+def check_metrics(path: str, require_metrics: list[str]) -> int:
+    text = open(path).read()
+    snap = json.loads(text, parse_constant=lambda c: fail(
+        f"{path}: non-standard JSON constant {c!r}"))
+    if not isinstance(snap, dict) or not snap:
+        fail(f"{path}: expected a non-empty snapshot object")
+    for name, m in snap.items():
+        if m.get("kind") not in KINDS:
+            fail(f"{path}: metric {name!r} has unknown kind "
+                 f"{m.get('kind')!r}")
+        series = m.get("series")
+        if not isinstance(series, dict):
+            fail(f"{path}: metric {name!r} missing series map")
+        for labels, s in series.items():
+            if m["kind"] == "histogram":
+                if sum(s["counts"]) != s["count"]:
+                    fail(f"{path}: {name}{labels}: bucket counts "
+                         f"{sum(s['counts'])} != count {s['count']}")
+                if len(s["counts"]) != len(s["buckets"]) + 1:
+                    fail(f"{path}: {name}{labels}: needs one overflow "
+                         f"bucket beyond the boundaries")
+            elif not (s is None or isinstance(s, (int, float))):
+                fail(f"{path}: {name}{labels}: scalar series must be "
+                     f"a number or null, got {type(s).__name__}")
+    for want in require_metrics:
+        if want not in snap:
+            fail(f"{path}: required metric {want!r} absent "
+                 f"(got {sorted(snap)[:12]}...)")
+    print(f"check_trace: {path}: {len(snap)} metrics OK")
+    return len(snap)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None,
+                    help="Chrome-trace JSON file to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="Registry.snapshot() JSON file to validate")
+    ap.add_argument("--require-span", action="append", default=[],
+                    help="span name that must appear in the trace "
+                         "(repeatable)")
+    ap.add_argument("--require-metric", action="append", default=[],
+                    help="metric name that must appear in the "
+                         "snapshot (repeatable)")
+    args = ap.parse_args()
+    if not args.trace and not args.metrics:
+        fail("nothing to check: pass --trace and/or --metrics")
+    if args.trace:
+        check_trace(args.trace, args.require_span)
+    if args.metrics:
+        check_metrics(args.metrics, args.require_metric)
+
+
+if __name__ == "__main__":
+    main()
